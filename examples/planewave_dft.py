@@ -1,0 +1,108 @@
+"""Plane-wave DFT mini-app — the paper's target application, end to end.
+
+Solves the lowest bands of a Kohn-Sham-like eigenproblem
+    H ψ = (−½∇² + V_loc) ψ
+in a plane-wave basis truncated to the cut-off sphere (paper Fig. 2/7),
+using the *all-band* preconditioned steepest-descent/CG iteration the paper
+describes (§2.2): every step applies batched FFTB transforms
+sphere→real-space (apply V) →sphere, exactly the red-line workload of
+Fig. 9. Bands are kept orthonormal with a Gram-Schmidt (QR) step — the
+matrix-matrix form that batching enables.
+
+Run:  PYTHONPATH=src python examples/planewave_dft.py [--n 32] [--bands 8]
+      (XLA_FLAGS=--xla_force_host_platform_device_count=8 to distribute)
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ProcGrid, SphereDomain, make_planewave_pair
+
+
+def build_hamiltonian(n, sph, inv, fwd):
+    """Kinetic |g|²/2 on sphere coefficients + Gaussian wells in real
+    space — a minimal but faithful plane-wave Hamiltonian."""
+    idx = np.argwhere(sph.mask())
+    g2 = ((idx - np.asarray(sph.center)) ** 2).sum(1).astype(np.float32)
+    kin = jnp.asarray(0.5 * g2 * (2 * np.pi / n) ** 2)
+    xs = np.stack(np.meshgrid(*[np.arange(n)] * 3, indexing="ij"), -1)
+    centers = [(n * 0.3,) * 3, (n * 0.7,) * 3]
+    v = np.zeros((n, n, n), np.float32)
+    for c in centers:
+        v -= 4.0 * np.exp(-((xs - np.asarray(c)) ** 2).sum(-1)
+                          / (2 * (n / 16) ** 2))
+    vloc = jnp.asarray(v)
+
+    def h_apply(c):                       # c: (nb, npacked)
+        psi = inv(inv.unpack(c))          # sphere → real space (batched)
+        hv = fwd(psi * vloc)              # V ψ, back to sphere cube
+        return kin * c + inv.pack(hv)
+
+    return h_apply, kin
+
+
+def orthonormalize(c):
+    q, _ = jnp.linalg.qr(c.T)             # bands are columns
+    return q.T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--bands", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--lr", type=float, default=0.3)
+    args = ap.parse_args(argv)
+
+    nproc = len(jax.devices())
+    g = ProcGrid.create([nproc])
+    sph = SphereDomain.from_diameter(args.n // 2)
+    inv, fwd = make_planewave_pair(g, args.n, sph, args.bands)
+    print(f"grid={g}  sphere d={sph.extents[0]} "
+          f"({sph.npacked} coeffs = {sph.npacked/args.n**3:.1%} of cube)")
+    print(inv.describe())
+
+    h_apply, kin = build_hamiltonian(args.n, sph, inv, fwd)
+    precond = 1.0 / (1.0 + jnp.asarray(kin))      # kinetic preconditioner
+
+    @jax.jit
+    def step(c):
+        hc = h_apply(c)
+        lam = jnp.sum(jnp.conj(c) * hc, axis=1).real      # Rayleigh
+        grad = hc - lam[:, None] * c
+        c = c - args.lr * (precond[None, :] * grad)
+        return orthonormalize(c), lam, jnp.linalg.norm(grad, axis=1)
+
+    rng = np.random.default_rng(0)
+    c = (rng.standard_normal((args.bands, sph.npacked))
+         + 1j * rng.standard_normal((args.bands, sph.npacked))
+         ).astype(np.complex64)
+    c = np.asarray(orthonormalize(jnp.asarray(c)))
+    c = jnp.asarray(c)
+
+    t0 = time.perf_counter()
+    hist = []
+    for it in range(args.iters):
+        c, lam, res = step(c)
+        e = float(lam.sum())
+        hist.append(e)
+        if it % 5 == 0 or it == args.iters - 1:
+            print(f"iter {it:3d}  E = {e:+.6f}  max|res| = "
+                  f"{float(res.max()):.3e}")
+    dt = time.perf_counter() - t0
+    ffts = args.iters * 2 * args.bands            # fwd+inv per band per it
+    print(f"\n{args.iters} all-band iterations in {dt:.2f}s "
+          f"({ffts} batched 3D transforms, "
+          f"{ffts/dt:.1f} transforms/s on {nproc} device(s))")
+    assert hist[-1] < hist[0], "energy must decrease"
+    drops = sum(1 for a, b in zip(hist, hist[1:]) if b > a + 1e-4)
+    print(f"energy decreased {hist[0]:+.4f} → {hist[-1]:+.4f} "
+          f"({drops} non-monotone steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (prefill + decode slots, slot reuse on completion).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 2
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    reqs = main(sys.argv[1:])
+    assert all(r.done for r in reqs)
+    print("all requests served ✓")

@@ -1,0 +1,17 @@
+"""FFTB core — flexible distributed multi-dimensional FFTs (the paper's
+contribution), plus the plane-wave sphere transform and spectral model ops."""
+
+from .domain import Domain, SphereDomain, sphere_for_cutoff
+from .dtensor import DistTensor, parse_dims
+from .fft import fftb
+from .grid import ProcGrid
+from .local_fft import dft_matrix, local_dft
+from .plan import FftPlan
+from .planewave import PlaneWaveFFT, make_planewave_pair
+from .spectral import fft_conv, fourier_mixer
+
+__all__ = [
+    "Domain", "SphereDomain", "sphere_for_cutoff", "DistTensor",
+    "parse_dims", "fftb", "ProcGrid", "dft_matrix", "local_dft", "FftPlan",
+    "PlaneWaveFFT", "make_planewave_pair", "fft_conv", "fourier_mixer",
+]

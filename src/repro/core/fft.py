@@ -1,0 +1,45 @@
+"""fftb() — the user-facing constructor, mirroring the paper's C++ API::
+
+    fftb fx = fftb(sizes, to, "X Y Z", ti, "x y z", g);
+
+The dims-strings passed here name the *transformed* dims of each tensor (in
+order); dims of the tensors not named are batch dims.  If the input tensor's
+trailing domain is a SphereDomain, the plane-wave path (staged padding fused
+into rectangular DFTs) is selected automatically — the paper's Fig. 8 usage.
+"""
+from __future__ import annotations
+
+from .domain import SphereDomain
+from .dtensor import DistTensor
+from .plan import FftPlan
+from .planewave import PlaneWaveFFT
+
+
+def fftb(sizes, tout: DistTensor, out_dims: str, tin: DistTensor,
+         in_dims: str, grid=None, *, inverse: bool = False,
+         backend: str = "matmul"):
+    """Create a distributed (batched) multi-dimensional Fourier transform.
+
+    Returns a callable plan object (FftPlan or PlaneWaveFFT) exposing
+    ``__call__``, ``describe()``, ``flop_count()`` and ``comm_stats()``.
+    """
+    grid = grid or tin.grid
+    in_names = tuple(in_dims.split())
+    out_names = tuple(out_dims.split())
+    if len(in_names) != len(out_names):
+        raise ValueError("in/out transform dims must pair up")
+    sizes = tuple(sizes)
+    if len(sizes) != len(in_names):
+        raise ValueError("one size per transformed dim")
+
+    sphere = any(isinstance(d, SphereDomain) for d in tin.domains)
+    if sphere:
+        return PlaneWaveFFT.from_tensors(sizes, tout, out_names, tin,
+                                         in_names, grid, inverse=inverse,
+                                         backend=backend)
+    for nm, n in zip(out_names, sizes):
+        if tout.dim_size(nm) != n:
+            raise ValueError(
+                f"output dim {nm} extent {tout.dim_size(nm)} != size {n}")
+    pairs = list(zip(in_names, out_names))
+    return FftPlan(tin, tout, pairs, inverse=inverse, backend=backend)

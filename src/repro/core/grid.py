@@ -1,0 +1,89 @@
+"""Processing grids — FFTB's `grid` object, mapped onto `jax.sharding.Mesh`.
+
+The paper creates 1D/2D/3D processing grids over an MPI communicator::
+
+    std::vector<int> procs{16};
+    grid g = grid(procs, MPI_COMM_WORLD);
+
+Here a ProcGrid wraps a jax Mesh.  A grid can own a fresh mesh (standalone
+FFT use) or *view* a subset of axes of an existing production mesh, which is
+how FFTB embeds inside the training/serving runtime (e.g. the FFT grid lives
+on the ("model",) axis while ("pod", "data") carry the batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def _make_mesh(shape: Sequence[int], names: Sequence[str]) -> Mesh:
+    return jax.make_mesh(
+        tuple(shape), tuple(names),
+        axis_types=(AxisType.Auto,) * len(shape),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcGrid:
+    """A 1D/2D/3D processing grid over a subset of mesh axes."""
+
+    mesh: Mesh
+    axes: tuple[str, ...]           # mesh axis names, grid dim 0..k-1
+
+    # ---------------------------------------------------------------- build
+    @staticmethod
+    def create(procs: Sequence[int], axis_names: Sequence[str] | None = None
+               ) -> "ProcGrid":
+        """Standalone grid (paper's `grid(procs, MPI_COMM_WORLD)`)."""
+        names = tuple(axis_names) if axis_names else tuple(
+            f"g{i}" for i in range(len(procs)))
+        return ProcGrid(_make_mesh(procs, names), names)
+
+    @staticmethod
+    def create_abstract(procs: Sequence[int],
+                        axis_names: Sequence[str] | None = None
+                        ) -> "ProcGrid":
+        """Device-less grid for plan construction/inspection (costing a
+        schedule for a 1024-GPU run from a laptop, as the paper's planner
+        does) — execution requires a real grid."""
+        names = tuple(axis_names) if axis_names else tuple(
+            f"g{i}" for i in range(len(procs)))
+        amesh = jax.sharding.AbstractMesh(tuple(procs), names)
+        return ProcGrid(amesh, names)
+
+    @staticmethod
+    def from_mesh(mesh: Mesh, axes: Sequence[str]) -> "ProcGrid":
+        """View `axes` of an existing mesh as the processing grid."""
+        for a in axes:
+            if a not in mesh.axis_names:
+                raise ValueError(f"axis {a!r} not in mesh {mesh.axis_names}")
+        return ProcGrid(mesh, tuple(axes))
+
+    # ---------------------------------------------------------------- query
+    @property
+    def ndim(self) -> int:
+        return len(self.axes)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.mesh.shape[a] for a in self.axes)
+
+    @property
+    def nprocs(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis_name(self, i: int) -> str:
+        return self.axes[i]
+
+    def axis_size(self, i: int) -> int:
+        return self.mesh.shape[self.axes[i]]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        dims = "x".join(str(s) for s in self.shape)
+        return f"ProcGrid({dims}, axes={self.axes})"

@@ -1,0 +1,317 @@
+"""FftPlan — stitches local-compute and data-movement stages (paper Fig. 4).
+
+Given input/output DistTensors and the set of transformed dims, the planner
+emits an alternating sequence of
+
+  * ``FFTStage``   — local (possibly rectangular) line DFTs on a dim that the
+                     current layout keeps fully local, and
+  * ``MoveStage``  — one ``all_to_all`` over a single grid axis, moving that
+                     axis between two dims (a distributed transpose),
+
+reproducing slab-pencil (1 move on a 1D grid), pencil-pencil-pencil (2 moves
+on a 2D grid) and volumetric (3D grid) schedules from the declared
+distributions alone.  The executed function is one ``shard_map`` over the
+grid's mesh axes; XLA fuses pack/rotate layout changes into the collectives
+(the paper's hand-written CUDA codelets).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from functools import cached_property
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layout as L
+from .dtensor import DistTensor
+from .local_fft import dft_flops, local_dft
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTStage:
+    dim: str
+    index: int                   # position in the logical dim order
+    n_in: int
+    n_out: int
+    inverse: bool
+    backend: str
+
+    def apply(self, x):
+        return local_dft(x, self.index, self.n_out, inverse=self.inverse,
+                         backend=self.backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveStage:
+    axis_name: str               # mesh axis
+    axis_size: int
+    src: str
+    dst: str
+    src_index: int
+    dst_index: int
+
+    def apply(self, x):
+        return jax.lax.all_to_all(
+            x, self.axis_name, split_axis=self.dst_index,
+            concat_axis=self.src_index, tiled=True)
+
+
+class FftPlan:
+    """A compiled-able distributed multi-dimensional (batched) FFT."""
+
+    def __init__(self, tin: DistTensor, tout: DistTensor,
+                 fft_dims: list[tuple[str, str]], *, inverse: bool = False,
+                 backend: str = "matmul"):
+        if tin.grid.mesh is not tout.grid.mesh:
+            raise ValueError("input and output tensors live on different "
+                             "meshes")
+        self.tin, self.tout, self.grid = tin, tout, tin.grid
+        self.inverse, self.backend = inverse, backend
+        self.dims = tin.dims
+        self.fft_pairs = list(fft_dims)
+
+        # map output dim names onto input dim names (batch dims by position)
+        o2i = {o: i for i, o in fft_dims}
+        in_batch = [d for d in tin.dims if d not in {i for i, _ in fft_dims}]
+        out_batch = [d for d in tout.dims if d not in o2i]
+        if len(in_batch) != len(out_batch):
+            raise ValueError("batch dims of input/output do not match")
+        o2i.update(dict(zip(out_batch, in_batch)))
+        if [o2i[d] for d in tout.dims] != list(tin.dims):
+            raise ValueError(
+                "output dims must correspond to input dims in order "
+                f"(got {tout.dims} vs {tin.dims})")
+
+        self._final_layout = L.normalize(
+            {o2i[d]: ax for d, ax in tout.layout.items()})
+        self._search()
+
+    # ------------------------------------------------------------ planning
+    def _search(self) -> None:
+        """Pick the transform order minimizing communicated bytes.
+
+        Rectangular (padding) transforms grow dims, so *when* a dim is
+        transposed matters: the paper's staged-padding win is precisely
+        scheduling the all-to-all before the moved dims are padded.  The
+        planner enumerates transform orders (≤ 3! for 3D), prices each
+        schedule with the comm model, and keeps the cheapest — the
+        "framework decides on the most suited implementation" behaviour
+        of the paper's intermediate block.
+        """
+        fft_in = [i for i, _ in self.fft_pairs]
+        best = None
+        for perm in itertools.permutations(fft_in):
+            try:
+                stages = self._build(list(perm))
+            except RuntimeError:
+                continue
+            cost = sum(s["bytes_per_device"]
+                       for s in self._comm_stats_for(stages))
+            moves = sum(isinstance(s, MoveStage) for s in stages)
+            key = (cost, moves)
+            if best is None or key < best[0]:
+                best = (key, stages)
+        if best is None:
+            raise RuntimeError("no feasible FFT schedule found")
+        self.stages = best[1]
+
+    def _build(self, order: list[str]) -> list:
+        grid_shape = self.grid.shape
+        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
+        # n_out per input fft dim
+        pair_out = {i: self.tout.dim_size(o) for i, o in self.fft_pairs}
+        lay = L.normalize(self.tin.layout)
+        stages: list[FFTStage | MoveStage] = []
+        done: set[str] = set()
+        fft_in_dims = [i for i, _ in self.fft_pairs]
+        batch_dims = [d for d in self.dims if d not in fft_in_dims]
+        idx = {d: k for k, d in enumerate(self.dims)}
+
+        def emit_move(axis: int, src: str, dst: str):
+            stages.append(MoveStage(
+                self.grid.axis_name(axis), grid_shape[axis], src, dst,
+                idx[src], idx[dst]))
+
+        def local(d):
+            return L.local_size(d, sizes[d], lay, grid_shape)
+
+        def pick_park(d: str, axis: int) -> str:
+            """Destination for an axis that must leave fft dim ``d``."""
+            cands = [t for t in self.dims if t != d
+                     and local(t) % grid_shape[axis] == 0]
+            if not cands:
+                raise RuntimeError(
+                    f"cannot free dim {d}: no dim can absorb grid axis "
+                    f"{axis} (layout {lay}, sizes {sizes})")
+
+            def score(t):
+                tgt = self._final_layout.get(t, ())
+                cur = lay.get(t, ())
+                wants = (len(cur) < len(tgt) and tgt[: len(cur)] == cur
+                         and tgt[len(cur)] == axis)
+                return (
+                    0 if wants else 1,                       # final home first
+                    0 if (t in done or t in batch_dims) else 1,  # avoid re-free
+                    -local(t),                               # roomiest
+                )
+            return min(cands, key=score)
+
+        for d in order:
+            while lay.get(d, ()):
+                axis = lay[d][-1]
+                dst = pick_park(d, axis)
+                emit_move(axis, d, dst)
+                lay = L.apply_move(lay, L.Move(axis, d, dst))
+            stages.append(FFTStage(d, idx[d], sizes[d], pair_out[d],
+                                   self.inverse, self.backend))
+            sizes[d] = pair_out[d]
+            done.add(d)
+
+        for mv in L.plan_redistribution(lay, self._final_layout, sizes,
+                                        grid_shape):
+            emit_move(mv.axis, mv.src, mv.dst)
+            lay = L.apply_move(lay, mv)
+        return stages
+
+    # ----------------------------------------------------------- execution
+    def _raw_apply(self, x):
+        for st in self.stages:
+            x = st.apply(x)
+        return x
+
+    def _raw_apply_lazy(self, x, compute_dtype=jnp.float32):
+        """Lazy-permutation, split-complex executor (§Perf optimization).
+
+        The eager path pays, per stage, two moveaxis transposes plus a
+        complex interleave/deinterleave around the real matmuls — ~6× the
+        useful HBM traffic on the paper's 256³ workload.  Here (a) the
+        transform axis is contracted IN PLACE with dot_general and the
+        output axis lands at the end (a logical permutation we only undo
+        once, at exit), and (b) data flows as separate (re, im) f32 planes
+        end-to-end, so nothing ever interleaves.  Same stages, same
+        collectives — only the local data movement differs.
+        """
+        from .local_fft import dft_matrix
+        perm = list(range(x.ndim))        # perm[i] = logical dim at pos i
+        xr = jnp.real(x).astype(compute_dtype)
+        xi = jnp.imag(x).astype(compute_dtype)
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                pos = perm.index(st.index)
+                w = dft_matrix(st.n_out, st.n_in, st.inverse)
+                wr = jnp.asarray(w.real).astype(compute_dtype)
+                wi = jnp.asarray(w.imag).astype(compute_dtype)
+                dn = (((pos,), (1,)), ((), ()))
+
+                def dot(a, b):
+                    return jax.lax.dot_general(
+                        a, b, dn, preferred_element_type=jnp.float32)
+                # Gauss 3-multiplication complex product: 3 real GEMMs
+                # instead of 4 (−25% MXU work and operand traffic):
+                #   m1 = xr·wr, m2 = xi·wi, m3 = (xr+xi)·(wr+wi)
+                #   yr = m1 − m2, yi = m3 − m1 − m2
+                m1 = dot(xr, wr)
+                m2 = dot(xi, wi)
+                m3 = dot((xr + xi).astype(compute_dtype),
+                         jnp.asarray(w.real + w.imag).astype(compute_dtype))
+                xr = (m1 - m2).astype(compute_dtype)
+                xi = (m3 - m1 - m2).astype(compute_dtype)
+                perm = [p for i, p in enumerate(perm) if i != pos] \
+                    + [st.index]
+            else:
+                sp = perm.index(st.dst_index)
+                cp = perm.index(st.src_index)
+                xr = jax.lax.all_to_all(xr, st.axis_name, split_axis=sp,
+                                        concat_axis=cp, tiled=True)
+                xi = jax.lax.all_to_all(xi, st.axis_name, split_axis=sp,
+                                        concat_axis=cp, tiled=True)
+        out_axes = [perm.index(i) for i in range(len(perm))]
+        xr = jnp.transpose(xr, out_axes)
+        xi = jnp.transpose(xi, out_axes)
+        return jax.lax.complex(xr.astype(jnp.float32),
+                               xi.astype(jnp.float32))
+
+    def _sharded(self, mode: str):
+        mesh = self.grid.mesh
+        if mode == "eager":
+            body = self._raw_apply
+        elif mode == "lazy":
+            body = self._raw_apply_lazy
+        elif mode == "lazy_bf16":
+            def body(x):
+                return self._raw_apply_lazy(x, compute_dtype=jnp.bfloat16)
+        else:
+            raise ValueError(mode)
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=self.tin.pspec, out_specs=self.tout.pspec,
+                           check_vma=False)
+        return jax.jit(fn)
+
+    @cached_property
+    def _fn_cache(self):
+        return {}
+
+    @property
+    def _sharded_fn(self):
+        return self._fn_cache.setdefault("eager", self._sharded("eager"))
+
+    def __call__(self, x, *, mode: str = "eager"):
+        if x.shape != self.tin.shape:
+            raise ValueError(f"input shape {x.shape} != {self.tin.shape}")
+        fn = self._fn_cache.setdefault(mode, self._sharded(mode))
+        return fn(x)
+
+    # ---------------------------------------------------------- accounting
+    def flop_count(self) -> int:
+        total = 0
+        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                batch = math.prod(sizes[d] for d in self.dims if d != st.dim)
+                total += dft_flops(st.n_out, st.n_in, batch, st.backend)
+                sizes[st.dim] = st.n_out
+        return total
+
+    def comm_stats(self, itemsize: int = 8) -> list[dict]:
+        """Per-MoveStage communication volume (bytes sent per device)."""
+        return self._comm_stats_for(self.stages, itemsize)
+
+    def _comm_stats_for(self, stages, itemsize: int = 8) -> list[dict]:
+        out = []
+        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
+        lay = L.normalize(self.tin.layout)
+        grid_shape = self.grid.shape
+        for st in stages:
+            if isinstance(st, FFTStage):
+                sizes[st.dim] = st.n_out
+                continue
+            local_elems = math.prod(
+                L.local_size(d, sizes[d], lay, grid_shape)
+                for d in self.dims)
+            p = st.axis_size
+            out.append({
+                "axis": st.axis_name, "procs": p,
+                "bytes_per_device": local_elems * itemsize * (p - 1) // p,
+                "move": f"{st.src}->{st.dst}",
+            })
+            # replay the move on the tracking layout
+            ax = [a for a in range(len(grid_shape))
+                  if self.grid.axis_name(a) == st.axis_name][0]
+            lay = L.apply_move(lay, L.Move(ax, st.src, st.dst))
+        return out
+
+    def describe(self) -> str:
+        lines = [f"FftPlan over {self.grid}: "
+                 f"{self.tin.dims} {self.tin.layout} -> "
+                 f"{self.tout.dims} {self.tout.layout}"]
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                kind = "iDFT" if st.inverse else "DFT"
+                lines.append(f"  {kind}[{st.dim}] {st.n_in}->{st.n_out} "
+                             f"({st.backend})")
+            else:
+                lines.append(f"  a2a[{st.axis_name}] {st.src}->{st.dst}")
+        return "\n".join(lines)

@@ -1,0 +1,138 @@
+"""Plane-wave (sphere-batched) distributed FFT — the paper's §2.2/§3.3.
+
+Wavefunction coefficients live inside a cut-off sphere of diameter d inside
+an FFT grid of width n (conventionally n = 2d, Fig. 2).  Instead of padding
+every sphere to the n³ cube up front (≈16× redundant data), the transform
+pads **in stages**, fusing each pad with that dimension's line DFTs
+(rectangular DFT matmuls — DESIGN.md §2) and scheduling the distributed
+transpose while the moved dims are still small.
+
+Stage schedule (inverse, sphere → real space; forward is the exact mirror
+with truncating DFTs):
+
+    in   (b, x{F}, y, z)  bounding cube d³, x sharded over fft axes F
+    iDFT z : d→n   (local rectangular matmul — pad fused)
+    a2a  over F    : gather x, split z       [moves b·d·d·n/F, the minimum]
+    iDFT y : d→n
+    iDFT x : d→n
+    out  (b, X, Y, Z{F})  real-space cube, z sharded — paper Fig. 5 layout
+
+All of this reuses FftPlan's machinery: the comm-cost schedule search finds
+this order automatically; this class adds the sphere bookkeeping (CSR offset
+arrays → static pack/unpack index tables) and the padded-cube baseline the
+paper compares against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .domain import Domain, SphereDomain
+from .dtensor import DistTensor
+from .plan import FftPlan
+
+
+class PlaneWaveFFT:
+    """Batched distributed sphere ↔ real-space transform."""
+
+    def __init__(self, sphere: SphereDomain, n: tuple[int, ...],
+                 tin: DistTensor, tout: DistTensor, *, inverse: bool,
+                 backend: str = "matmul"):
+        self.sphere = sphere
+        self.n = tuple(n)
+        self.inverse = inverse
+        self.tin, self.tout = tin, tout
+        self.grid = tin.grid
+        # transformed dims are the trailing three (batch dims lead)
+        pairs = list(zip(tin.dims[-3:], tout.dims[-3:]))
+        self.plan = FftPlan(tin, tout, pairs, inverse=inverse,
+                            backend=backend)
+        self._pack_idx = jnp.asarray(sphere.pack_indices())
+        self._mask = jnp.asarray(sphere.mask())
+
+    # ------------------------------------------------------------- factory
+    @staticmethod
+    def from_tensors(sizes, tout, out_names, tin, in_names, grid, *,
+                     inverse: bool, backend: str = "matmul"):
+        sphere = next(d for d in (tin if inverse else tout).domains
+                      if isinstance(d, SphereDomain))
+        return PlaneWaveFFT(sphere, sizes, tin, tout, inverse=inverse,
+                            backend=backend)
+
+    # ------------------------------------------------------------- execute
+    def __call__(self, x, *, mode: str = "eager"):
+        return self.plan(x, mode=mode)
+
+    # ------------------------------------------------- sphere pack/unpack
+    def unpack(self, packed):
+        """(…, npacked) CSR coefficients → (…, d, d, d) bounding cube."""
+        d = self.sphere.extents
+        flat = jnp.zeros(packed.shape[:-1] + (math.prod(d),), packed.dtype)
+        flat = flat.at[..., self._pack_idx].set(packed)
+        return flat.reshape(packed.shape[:-1] + d)
+
+    def pack(self, cube):
+        """(…, d, d, d) bounding cube → (…, npacked) CSR coefficients."""
+        d = self.sphere.extents
+        flat = cube.reshape(cube.shape[:-3] + (math.prod(d),))
+        return flat[..., self._pack_idx]
+
+    def mask_cube(self, cube):
+        """Zero out everything outside the cut-off sphere (cube form)."""
+        return cube * self._mask.astype(cube.dtype)
+
+    # ---------------------------------------------------------- accounting
+    def flop_count(self) -> int:
+        return self.plan.flop_count()
+
+    def comm_stats(self, itemsize: int = 8):
+        return self.plan.comm_stats(itemsize)
+
+    def describe(self) -> str:
+        return ("PlaneWaveFFT sphere d=%d -> grid n=%d\n" %
+                (self.sphere.extents[0], self.n[0])) + self.plan.describe()
+
+
+def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
+                        backend: str = "matmul",
+                        batch_axes: tuple[int, ...] = (),
+                        fft_axes: tuple[int, ...] | None = None
+                        ) -> tuple[PlaneWaveFFT, PlaneWaveFFT]:
+    """(inverse, forward) plane-wave transforms sharing one data layout.
+
+    inverse: sphere bounding-cube (b, x{F}, y, z) → real cube (b, X, Y, Z{F})
+    forward: real cube (b, x{F'}, …) → sphere bounding-cube, exact adjoint
+    layouts, so `forward(inverse(c))` round-trips without extra movement.
+    """
+    if fft_axes is None:
+        fft_axes = tuple(a for a in range(grid.ndim) if a not in batch_axes)
+    d = sphere.extents[0]
+    bdom = Domain((0,), (nb - 1,))
+    sph = sphere
+    cube = Domain((0, 0, 0), (n - 1, n - 1, n - 1))
+
+    def spec(names, dist):
+        toks = []
+        for nm in names:
+            ax = dist.get(nm, ())
+            toks.append(nm + ("{%s}" % ",".join(map(str, ax)) if ax else ""))
+        return " ".join(toks)
+
+    bspec = {"b": tuple(batch_axes)} if batch_axes else {}
+    in_i = DistTensor.create((bdom, sph), spec(
+        ("b", "x", "y", "z"), {**bspec, "x": tuple(fft_axes)}), grid)
+    out_i = DistTensor.create((bdom, cube), spec(
+        ("b", "X", "Y", "Z"), {**bspec, "Z": tuple(fft_axes)}), grid)
+    inv = PlaneWaveFFT(sph, (n, n, n), in_i, out_i, inverse=True,
+                       backend=backend)
+
+    in_f = DistTensor.create((bdom, cube), spec(
+        ("b", "x", "y", "z"), {**bspec, "z": tuple(fft_axes)}), grid)
+    out_f = DistTensor.create((bdom, sph), spec(
+        ("b", "X", "Y", "Z"), {**bspec, "X": tuple(fft_axes)}), grid)
+    fwd = PlaneWaveFFT(sph, (n, n, n), in_f, out_f, inverse=False,
+                       backend=backend)
+    return inv, fwd

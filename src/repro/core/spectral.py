@@ -1,0 +1,57 @@
+"""Model-facing spectral ops built on the FFTB local backends.
+
+These are the integration points of the paper's infrastructure with the LM
+architectures (DESIGN.md §5):
+
+  * ``fft_conv``      — FFT long convolution (used by Mamba-2's depthwise
+                        temporal conv when ``conv_impl="fft"``); causal,
+                        linear-time in the kernel, O(S log S) overall.
+  * ``fourier_mixer`` — FNet-style token mixer (beyond-paper demo layer).
+
+Both operate on *local* (already sharded) data — inside a model partitioned
+by GSPMD these run per-shard, exactly like FFTB's local-compute stages.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .local_fft import local_dft
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def fft_conv(x, kernel, axis: int = 1, backend: str = "jnp"):
+    """Causal depthwise convolution via frequency domain.
+
+    x: (..., S, ...) real; kernel: (K, C) or (K,) with K ≤ S; convolves along
+    ``axis`` (sequence).  Zero-padding to 2·next_pow2 avoids circular
+    wrap-around — the same pad-to-avoid-aliasing requirement as the paper's
+    n = 2d rule for plane-wave grids.
+    """
+    S = x.shape[axis]
+    K = kernel.shape[0]
+    L = _next_pow2(S + K - 1)
+    xm = jnp.moveaxis(x, axis, -1)                       # (..., C, S)? keep
+    # operate with seq last
+    Xf = local_dft(xm.astype(jnp.complex64), -1, L, backend=backend)
+    if kernel.ndim == 1:
+        k = kernel[None, :]
+    else:
+        k = jnp.moveaxis(kernel, 0, -1)                  # (C, K)
+    Kf = local_dft(k.astype(jnp.complex64), -1, L, backend=backend)
+    Yf = Xf * Kf
+    y = local_dft(Yf, -1, L, inverse=True, backend=backend)
+    y = jnp.real(y[..., :S]).astype(x.dtype)
+    return jnp.moveaxis(y, -1, axis)
+
+
+def fourier_mixer(x, backend: str = "jnp"):
+    """FNet token mixing: Re(FFT_seq(FFT_hidden(x))). x: (B, S, D)."""
+    h = local_dft(x.astype(jnp.complex64), -1, backend=backend)
+    s = local_dft(h, -2, backend=backend)
+    return jnp.real(s).astype(x.dtype)

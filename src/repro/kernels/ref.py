@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.local_fft import dft_matrix
+
+
+def dft_apply_ref(x, n_out: int | None = None, *, inverse: bool = False):
+    """Oracle for kernels.ops.dft_apply: (B, n_in) complex → (B, n_out).
+
+    Defined via jnp.fft on the zero-padded / truncated line so the oracle is
+    independent of the DFT-matrix construction used by the kernel.
+    """
+    b, n_in = x.shape
+    n_out = n_in if n_out is None else n_out
+    fn = jnp.fft.ifft if inverse else jnp.fft.fft
+    if n_in <= n_out:
+        xp = jnp.pad(x, ((0, 0), (0, n_out - n_in)))
+        return fn(xp, axis=-1)
+    return fn(x, axis=-1)[:, :n_out]
+
+
+def complex_matmul_ref(xr, xi, wr, wi):
+    """Oracle for the raw kernel: y = x @ w.T in split re/im form."""
+    yr = xr @ wr.T - xi @ wi.T
+    yi = xr @ wi.T + xi @ wr.T
+    return yr, yi
+
+
+def four_step_ref(x, *, inverse: bool = False):
+    """Oracle for kernels.ops.four_step_dft — plain jnp.fft."""
+    fn = jnp.fft.ifft if inverse else jnp.fft.fft
+    return fn(x, axis=-1)
+
+
+def twiddle_matrix(n1: int, n2: int, inverse: bool) -> np.ndarray:
+    """W_N^{j1·k2} twiddles for the four-step split N = n1·n2.
+
+    Convention (kernels/ops.py): input line reshaped to (n2, n1) with j1
+    fast; inner DFT_n2 over axis 0 → T[k2, j1]; T *= W[k2, j1]; outer DFT_n1
+    over axis 1 → Z[k2, k1]; output = Z.T.ravel().
+    """
+    n = n1 * n2
+    j1 = np.arange(n1)
+    k2 = np.arange(n2)
+    sign = 2j if inverse else -2j
+    w = np.exp(sign * np.pi * np.outer(k2, j1) / n)
+    return w.astype(np.complex64)

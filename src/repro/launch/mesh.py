@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  Single pod: 16×16 = 256 chips
+("data", "model"); multi-pod: 2×16×16 = 512 chips ("pod", "data", "model")
+— "pod" is the DCN-like axis (pure DP + hierarchical gradient reduction).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, found {len(devices)} — "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before any "
+            "jax import")
+    import numpy as np
+    dev_array = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over whatever devices exist (CPU tests/examples)."""
+    import numpy as np
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))

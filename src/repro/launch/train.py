@@ -1,0 +1,94 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --preset cpu-ci --steps 50
+
+Presets size the run to the host: `cpu-ci` trains the reduced config on
+whatever devices exist; `full` uses the published config on the production
+mesh (real accelerators).  Fault-tolerance knobs (checkpoint dir/interval,
+auto-resume, grad compression) are flags.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model_zoo import build
+from repro.optim.adamw import AdamWConfig
+from repro.sharding import ctx, rules
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--preset", default="cpu-ci",
+                    choices=["cpu-ci", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fixed-batch", action="store_true",
+                    help="repeat step-0 batch (memorization curve for CI)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.preset == "cpu-ci":
+        cfg = cfg.reduced()
+        mesh = make_host_mesh((1, 1))
+    elif args.preset == "100m":
+        # ~100M-param member of the same family
+        cfg = dataclasses.replace(
+            cfg.reduced(), name=cfg.name + "-100m", n_layers=12,
+            d_model=768, n_heads=12, n_kv=max(cfg.n_kv and 4, 0),
+            head_dim=64, d_ff=3072, vocab=32000)
+        mesh = make_host_mesh((1, 1))
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    bundle = build(cfg)
+    extra = {}
+    if cfg.family == "vlm":
+        import jax.numpy as jnp
+        extra["image_embeds"] = jnp.zeros(
+            (args.global_batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        import jax.numpy as jnp
+        extra["frames"] = jnp.zeros(
+            (args.global_batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches,
+        compress_grads=args.compress_grads)
+    dcfg = DataConfig(vocab=cfg.vocab, seq=args.seq,
+                      global_batch=args.global_batch)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1))
+    with ctx.use(mesh, rules.batch_axis(mesh, args.global_batch)):
+        trainer = Trainer(bundle, opt, tcfg, dcfg, mesh=mesh,
+                          extra_batch=extra)
+        if args.fixed_batch:
+            trainer.pipeline.batch_at = \
+                lambda step, _f=type(trainer.pipeline).batch_at, \
+                p=trainer.pipeline: _f(p, 0)
+        trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    if losses:
+        print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f} "
+              f"({len(losses)} steps)")
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

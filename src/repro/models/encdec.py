@@ -1,0 +1,177 @@
+"""Whisper-style encoder–decoder.
+
+The conv audio frontend is a STUB per the task spec: the model consumes
+precomputed frame embeddings (B, enc_seq, d_model).  Encoder layers use
+bidirectional blocked attention with sinusoidal positions; decoder layers
+use causal self-attention (RoPE — a documented deviation from Whisper's
+learned positions, DESIGN.md §5) plus cross-attention over encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def _scan(f, init, xs, **kw):
+    kw.setdefault("unroll", True if flags.scan_unroll() else 1)
+    return jax.lax.scan(f, init, xs, **kw)
+
+from .attention import blocked_attention, decode_attention
+from .layers import dense_init, mlp_apply, mlp_init, rms_norm, sinusoidal_pos
+from .transformer import _dtype, _remat, attn_apply, init_layer, logits_fn
+from repro.sharding import ctx
+
+
+def _init_cross(key, cfg, dt):
+    D, H, Kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.zeros((D,), jnp.float32),
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dt),
+        "wk": dense_init(ks[1], (D, Kh * hd), dtype=dt),
+        "wv": dense_init(ks[2], (D, Kh * hd), dtype=dt),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dt),
+    }
+
+
+def init_params(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    x_keys = jax.random.split(ks[2], cfg.n_layers)
+    p = {
+        "embed": dense_init(ks[3], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dt),
+        "enc_layers": jax.vmap(lambda k: init_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_layer(k, cfg))(dec_keys),
+        "cross": jax.vmap(lambda k: _init_cross(k, cfg, dt))(x_keys),
+        "ln_enc": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[4], (cfg.d_model, cfg.vocab),
+                                  scale=0.02, dtype=dt)
+    return p
+
+
+# ---------------------------------------------------------------- encoder
+def encode(params, frames, cfg):
+    """frames: (B, enc_seq, D) stub embeddings → encoder states."""
+    B, S, D = frames.shape
+    x = frames.astype(_dtype(cfg)) + sinusoidal_pos(S, D).astype(_dtype(cfg))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, S, cfg.n_kv, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, S, cfg.n_kv, cfg.head_dim)
+        o = blocked_attention(q, k, v, causal=False)
+        x = x + o.reshape(B, S, -1) @ lp["wo"]
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return ctx.constrain_act(
+            x + mlp_apply(lp["mlp"], h, cfg.activation)), None
+
+    x = ctx.constrain_act(x)
+    x, _ = _scan(_remat(body, cfg), x, params["enc_layers"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _cross_kv(xp, enc, cfg):
+    B, Se, _ = enc.shape
+    k = (enc @ xp["wk"]).reshape(B, Se, cfg.n_kv, cfg.head_dim)
+    v = (enc @ xp["wv"]).reshape(B, Se, cfg.n_kv, cfg.head_dim)
+    return k, v
+
+
+def _cross_apply(xp, x, k, v, cfg):
+    B, S, D = x.shape
+    h = rms_norm(x, xp["ln"], cfg.norm_eps)
+    q = (h @ xp["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    o = blocked_attention(q, k, v, causal=False)
+    return o.reshape(B, S, -1) @ xp["wo"]
+
+
+# ---------------------------------------------------------------- decoder
+def decode_train(params, tokens, enc, cfg):
+    """Teacher-forced decoder pass. tokens: (B, S) → hidden (B, S, D)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, scans):
+        lp, xp = scans
+        a, _ = attn_apply(lp, x, cfg, positions)
+        x = x + a
+        k, v = _cross_kv(xp, enc, cfg)
+        x = x + _cross_apply(xp, x, k, v, cfg)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return ctx.constrain_act(
+            x + mlp_apply(lp["mlp"], h, cfg.activation)), None
+
+    x, _ = _scan(_remat(body, cfg), x,
+                        (params["dec_layers"], params["cross"]))
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    L, Kh, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, capacity, Kh, hd), dtype),
+        "v": jnp.zeros((L, batch, capacity, Kh, hd), dtype),
+        "xk": jnp.zeros((L, batch, cfg.enc_seq, Kh, hd), dtype),
+        "xv": jnp.zeros((L, batch, cfg.enc_seq, Kh, hd), dtype),
+    }
+
+
+def prefill(params, tokens, frames, cfg, cache):
+    """Encode + teacher-forced decoder prefill; fills self & cross caches."""
+    enc = encode(params, frames, cfg)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, scans):
+        lp, xp, ck, cv = scans
+        a, (ck, cv) = attn_apply(lp, x, cfg, positions, cache=(ck, cv))
+        x = x + a
+        k, v = _cross_kv(xp, enc, cfg)
+        x = x + _cross_apply(xp, x, k, v, cfg)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp_apply(lp["mlp"], h, cfg.activation), (ck, cv, k, v)
+
+    x, (ck, cv, xk, xv) = _scan(
+        _remat(body, cfg), x,
+        (params["dec_layers"], params["cross"], cache["k"], cache["v"]))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return h, {"k": ck, "v": cv,
+               "xk": xk.astype(cache["xk"].dtype),
+               "xv": xv.astype(cache["xv"].dtype)}
+
+
+def decode_step(params, tokens, cfg, cache, lengths):
+    x = params["embed"][tokens]
+    B = x.shape[0]
+
+    def body(x, scans):
+        lp, xp, ck, cv, xk, xv = scans
+        a, (ck, cv) = attn_apply(lp, x, cfg, lengths[:, None],
+                                 cache=(ck, cv), lengths=lengths)
+        x = x + a
+        h = rms_norm(x, xp["ln"], cfg.norm_eps)
+        q = (h @ xp["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        xo = decode_attention(
+            q, xk.astype(x.dtype), xv.astype(x.dtype),
+            jnp.full((B,), xk.shape[1], jnp.int32))
+        x = x + xo.reshape(B, 1, -1) @ xp["wo"]
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp_apply(lp["mlp"], h, cfg.activation), (ck, cv)
+
+    x, (ck, cv) = _scan(
+        body, x, (params["dec_layers"], params["cross"], cache["k"],
+                  cache["v"], cache["xk"], cache["xv"]))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, h, cfg), {**cache, "k": ck, "v": cv}

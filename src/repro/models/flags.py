@@ -1,0 +1,29 @@
+"""Runtime flags for lowering modes.
+
+UNROLL: when True, every lax.scan in the model stack unrolls. Used by the
+dry-run *accounting* pass: XLA's cost_analysis counts a while-loop body
+ONCE regardless of trip count, so scanned-layer FLOPs/collectives are
+invisible. The accounting pass lowers unrolled at reduced depth (L=1, 2)
+and extrapolates linearly to the full depth (exact: scan bodies are
+homogeneous). Production lowering keeps scans rolled (depth-independent
+compile time).
+"""
+UNROLL = False
+
+
+def scan_unroll():
+    return UNROLL
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def unrolled():
+    global UNROLL
+    old = UNROLL
+    UNROLL = True
+    try:
+        yield
+    finally:
+        UNROLL = old

@@ -1,0 +1,127 @@
+"""Shared neural-net building blocks (pure functional, param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ctx
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = (1.0 / np.sqrt(fan_in)) if scale is None else scale
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(pos * div)
+    out[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(out)
+
+
+# ------------------------------------------------------------------- MLP
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    glu = activation in ("swiglu", "geglu")
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+         "w_down": dense_init(ks[1], (d_ff, d_model), dtype=dtype)}
+    if glu:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, activation: str):
+    # pin the TP layout of the intermediate (tokens unsharded, d_ff over
+    # "model") — without this, GSPMD resolves the weight-grad contraction
+    # against SP-sharded cotangents by replicating full (d_ff, d_model)
+    # gradients (observed: 2×5 GiB per layer on nemotron-340b)
+    def pin(h):
+        if h.ndim == 3:
+            return ctx.constrain(h, "batch", None, "model")
+        return h
+    up = pin(x @ p["w_up"])
+    if activation == "swiglu":
+        h = jax.nn.silu(pin(x @ p["w_gate"])) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(pin(x @ p["w_gate"])) * up
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(activation)
+    return h @ p["w_down"]
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C).
+
+    Returns (y, new_cache) where cache holds the trailing K-1 inputs for
+    single-step decode.  With cache=None the left context is zeros (train /
+    full prefill).
+    """
+    K = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_cache = xp[:, -(K - 1):, :] if K > 1 else None
+    return y, new_cache
+
+
+def fft_causal_conv1d(x, w, cache=None):
+    """FFTB-backed depthwise causal conv (paper integration point).
+
+    Identical contract to causal_conv1d; uses frequency-domain convolution
+    via repro.core.spectral.fft_conv — profitable for long kernels; with
+    K=4 it is a correctness-equivalent demonstration path.
+    """
+    from repro.core.spectral import fft_conv
+    K = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    kernel = w[::-1]                       # correlation → convolution flip
+    y = fft_conv(xp, kernel, axis=1)[:, K - 1:, :]
+    new_cache = xp[:, -(K - 1):, :] if K > 1 else None
+    return y, new_cache

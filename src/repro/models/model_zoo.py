@@ -1,0 +1,446 @@
+"""build(cfg) → ModelBundle: one uniform interface over all families.
+
+batch dicts:
+  dense/moe/ssm/hybrid : {"tokens", "labels"}
+  vlm                  : + {"image_embeds" (B, n_img, D)}  (stub frontend)
+  encdec               : {"frames" (B, enc_seq, D), "tokens", "labels"}
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def _scan(f, init, xs, **kw):
+    kw.setdefault("unroll", True if flags.scan_unroll() else 1)
+    return jax.lax.scan(f, init, xs, **kw)
+
+from . import encdec, rglru, ssm, transformer
+from .layers import dense_init, mlp_apply, mlp_init, rms_norm
+from .transformer import _dtype, _remat, init_layer, layer_apply, logits_fn
+from repro.sharding import ctx
+
+
+# ------------------------------------------------------------------ loss
+def chunked_xent(params, h, labels, cfg, chunk: int = 512,
+                 mask=None):
+    """Sequence-chunked softmax cross-entropy; never materializes
+    (B, S, V) — logits are built per chunk (vocab stays model-sharded) and
+    the chunk body is rematerialized in the backward pass."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nch = S // chunk
+
+    @jax.checkpoint
+    def body(tot, idx):
+        hc = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, 1)
+        hc = ctx.constrain(hc, "batch", None, None)
+        logits = logits_fn(params, hc, cfg)               # (B,chunk,V) f32
+        logits = ctx.constrain(logits, "batch", None, "model")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if mask is not None:
+            mc = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, 1)
+            nll = nll * mc
+        return tot + nll.sum(), None
+
+    total, _ = _scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(nch))
+    denom = B * S if mask is None else None
+    if denom is None:
+        return total / jnp.maximum(mask.sum(), 1.0)
+    return total / denom
+
+
+# ------------------------------------------------------------ SSM family
+def ssm_init_params(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+
+    def one(k):
+        return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ssm": ssm.ssm_init(k, cfg, dt)}
+
+    p = {
+        "embed": dense_init(ks[1], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dt),
+        "layers": jax.vmap(one)(lkeys),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab),
+                                  scale=0.02, dtype=dt)
+    return p
+
+
+def ssm_forward(params, tokens, cfg):
+    x = ctx.constrain_act(params["embed"][tokens])
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, _ = ssm.ssm_block(lp["ssm"], h, cfg)
+        return ctx.constrain_act(x + y), None
+
+    x, _ = _scan(_remat(body, cfg), x, params["layers"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def ssm_init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    st = ssm.ssm_init_state(cfg, batch, dtype)
+    L = cfg.n_layers
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), st)
+
+
+def ssm_prefill(params, tokens, cfg, cache):
+    x = params["embed"][tokens]
+
+    def body(x, scans):
+        lp, st = scans
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, new_st = ssm.ssm_block(lp["ssm"], h, cfg, state=st)
+        return x + y, new_st
+
+    x, new_cache = _scan(_remat(body, cfg), x,
+                                (params["layers"], cache))
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def ssm_decode(params, tokens, cfg, cache, lengths):
+    x = params["embed"][tokens]
+
+    def body(x, scans):
+        lp, st = scans
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, new_st = ssm.ssm_block(lp["ssm"], h, cfg, state=st)
+        return x + y, new_st
+
+    x, new_cache = _scan(body, x, (params["layers"], cache))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, h, cfg), new_cache
+
+
+# --------------------------------------------------------- hybrid family
+def _hybrid_counts(cfg):
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_groups * len(pat)
+    return n_groups, n_tail
+
+
+def _rec_init(key, cfg, dt):
+    ks = jax.random.split(key, 2)
+    return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "rglru": rglru.rglru_init(ks[0], cfg, dt),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation,
+                            dt)}
+
+
+def hybrid_init_params(key, cfg):
+    dt = _dtype(cfg)
+    n_groups, n_tail = _hybrid_counts(cfg)
+    ks = jax.random.split(key, 4)
+
+    def group(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"rec1": _rec_init(k1, cfg, dt),
+                "rec2": _rec_init(k2, cfg, dt),
+                "attn": init_layer(k3, cfg)}
+
+    p = {
+        "embed": dense_init(ks[1], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dt),
+        "groups": jax.vmap(group)(jax.random.split(ks[0], n_groups)),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if n_tail:
+        p["tail"] = jax.vmap(lambda k: _rec_init(k, cfg, dt))(
+            jax.random.split(ks[2], n_tail))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab),
+                                  scale=0.02, dtype=dt)
+    return p
+
+
+def _rec_apply(p, x, cfg, state=None):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, new_state = rglru.rglru_block(p["rglru"], h, cfg, state=state)
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h, cfg.activation), new_state
+
+
+def hybrid_forward(params, tokens, cfg):
+    x = ctx.constrain_act(params["embed"][tokens])
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, gp):
+        x, _ = _rec_apply(gp["rec1"], x, cfg)
+        x, _ = _rec_apply(gp["rec2"], x, cfg)
+        x, _ = layer_apply(gp["attn"], x, cfg, positions,
+                           window=cfg.local_window)
+        return ctx.constrain_act(x), None
+
+    x, _ = _scan(_remat(body, cfg), x, params["groups"])
+    if "tail" in params:
+        def tbody(x, tp):
+            x, _ = _rec_apply(tp, x, cfg)
+            return x, None
+        x, _ = _scan(_remat(tbody, cfg), x, params["tail"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def hybrid_init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    n_groups, n_tail = _hybrid_counts(cfg)
+    W = min(cfg.local_window or capacity, capacity)
+    rec = rglru.rglru_init_state(cfg, batch)
+    cache = {
+        "rec1": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(), rec),
+        "rec2": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(), rec),
+        "k": jnp.zeros((n_groups, batch, W, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_groups, batch, W, cfg.n_kv, cfg.head_dim), dtype),
+    }
+    if n_tail:
+        cache["tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_tail,) + a.shape).copy(), rec)
+    return cache
+
+
+def _hybrid_attn_prefill(lp, x, cfg, positions, ck, cv):
+    """Local-attention sub-block; fills the ring cache (capacity W) with the
+    last W roped keys/values at slots = position % W (ring invariant)."""
+    from .attention import blocked_attention
+    from .layers import apply_rope
+    B, S, D = x.shape
+    H, Kh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    W = ck.shape[1]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(B, S, H, hd)
+    k = (h @ lp["wk"]).reshape(B, S, Kh, hd)
+    v = (h @ lp["wv"]).reshape(B, S, Kh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = blocked_attention(q, k, v, causal=True, window=cfg.local_window)
+    x = x + o.reshape(B, S, H * hd) @ lp["wo"]
+    tail = min(W, S)
+    slots = (jnp.arange(S - tail, S)) % W
+    ck = ck.at[:, slots].set(k[:, -tail:].astype(ck.dtype))
+    cv = cv.at[:, slots].set(v[:, -tail:].astype(cv.dtype))
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h2, cfg.activation), ck, cv
+
+
+def _hybrid_attn_decode(lp, x, cfg, ck, cv, lengths):
+    """Single-token local attention against the ring cache."""
+    from .attention import decode_attention
+    from .layers import apply_rope
+    B = x.shape[0]
+    H, Kh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    W = ck.shape[1]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(B, 1, H, hd)
+    k = (h @ lp["wk"]).reshape(B, 1, Kh, hd)
+    v = (h @ lp["wv"]).reshape(B, 1, Kh, hd)
+    q = apply_rope(q, lengths[:, None], cfg.rope_theta)
+    k = apply_rope(k, lengths[:, None], cfg.rope_theta)
+    slot = lengths % W
+    bidx = jnp.arange(B)
+    ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+    filled = jnp.minimum(lengths + 1, W)
+    o = decode_attention(q, ck, cv, filled)
+    x = x + o.reshape(B, 1, H * hd) @ lp["wo"]
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h2, cfg.activation), ck, cv
+
+
+def hybrid_prefill(params, tokens, cfg, cache):
+    x = params["embed"][tokens]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, scans):
+        gp, r1, r2, ck, cv = scans
+        x, nr1 = _rec_apply(gp["rec1"], x, cfg, state=r1)
+        x, nr2 = _rec_apply(gp["rec2"], x, cfg, state=r2)
+        x, ck, cv = _hybrid_attn_prefill(gp["attn"], x, cfg, positions,
+                                         ck, cv)
+        return x, (nr1, nr2, ck, cv)
+
+    x, (r1, r2, ck, cv) = _scan(
+        _remat(body, cfg), x,
+        (params["groups"], cache["rec1"], cache["rec2"],
+         cache["k"], cache["v"]))
+    new_cache = {"rec1": r1, "rec2": r2, "k": ck, "v": cv}
+    if "tail" in params:
+        def tbody(x, scans):
+            tp, st = scans
+            x, nst = _rec_apply(tp, x, cfg, state=st)
+            return x, nst
+        x, tst = _scan(_remat(tbody, cfg), x,
+                              (params["tail"], cache["tail"]))
+        new_cache["tail"] = tst
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def hybrid_decode(params, tokens, cfg, cache, lengths):
+    x = params["embed"][tokens]
+
+    def body(x, scans):
+        gp, r1, r2, ck, cv = scans
+        x, nr1 = _rec_apply(gp["rec1"], x, cfg, state=r1)
+        x, nr2 = _rec_apply(gp["rec2"], x, cfg, state=r2)
+        x, ck, cv = _hybrid_attn_decode(gp["attn"], x, cfg, ck, cv, lengths)
+        return x, (nr1, nr2, ck, cv)
+
+    x, (r1, r2, ck, cv) = _scan(
+        body, x, (params["groups"], cache["rec1"], cache["rec2"],
+                  cache["k"], cache["v"]))
+    new_cache = {"rec1": r1, "rec2": r2, "k": ck, "v": cv}
+    if "tail" in params:
+        def tbody(x, scans):
+            tp, st = scans
+            x, nst = _rec_apply(tp, x, cfg, state=st)
+            return x, nst
+        x, tst = _scan(tbody, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tst
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, h, cfg), new_cache
+
+
+def _hybrid_bundle(cfg):
+    def fwd(params, batch):
+        return hybrid_forward(params, batch["tokens"], cfg)
+
+    def loss(params, batch):
+        return chunked_xent(params, fwd(params, batch), batch["labels"], cfg)
+
+    def prefill_fn(params, batch, cache):
+        h, cache = hybrid_prefill(params, batch["tokens"], cfg, cache)
+        return logits_fn(params, h[:, -1:], cfg), cache
+
+    def decode_fn(params, tokens, cache, lengths):
+        return hybrid_decode(params, tokens, cfg, cache, lengths)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(hybrid_init_params, cfg=cfg),
+        forward=fwd, loss=loss,
+        init_cache=functools.partial(hybrid_init_cache, cfg),
+        prefill=prefill_fn,
+        decode=decode_fn)
+
+
+def build(cfg):
+    return _BUILDERS[cfg.family](cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: Any
+    init: Callable
+    forward: Callable                 # (params, batch) -> hidden
+    loss: Callable                    # (params, batch) -> scalar
+    init_cache: Callable              # (batch, capacity, dtype) -> cache
+    prefill: Callable                 # (params, batch, cache) -> (h, cache)
+    decode: Callable                  # (params, tok, cache, len) -> (lg, c)
+
+
+def _lm_bundle(cfg):
+    def fwd(params, batch):
+        return transformer.forward(params, batch["tokens"], cfg,
+                                   embeds=batch.get("image_embeds"))
+
+    def loss(params, batch):
+        h = fwd(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            h = h[:, -labels.shape[1]:]       # loss over text positions only
+        return chunked_xent(params, h, labels, cfg)
+
+    def prefill_fn(params, batch, cache):
+        h, cache = transformer.prefill(params, batch["tokens"], cfg, cache,
+                                       embeds=batch.get("image_embeds"))
+        return logits_fn(params, h[:, -1:], cfg), cache
+
+    def decode_fn(params, tokens, cache, lengths):
+        return transformer.decode_step(params, tokens, cfg, cache, lengths)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(transformer.init_params, cfg=cfg),
+        forward=fwd, loss=loss,
+        init_cache=functools.partial(transformer.init_cache, cfg),
+        prefill=prefill_fn, decode=decode_fn)
+
+
+def _ssm_bundle(cfg):
+    def fwd(params, batch):
+        return ssm_forward(params, batch["tokens"], cfg)
+
+    def loss(params, batch):
+        return chunked_xent(params, fwd(params, batch), batch["labels"], cfg)
+
+    def prefill_fn(params, batch, cache):
+        h, cache = ssm_prefill(params, batch["tokens"], cfg, cache)
+        return logits_fn(params, h[:, -1:], cfg), cache
+
+    def decode_fn(params, tokens, cache, lengths):
+        return ssm_decode(params, tokens, cfg, cache, lengths)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(ssm_init_params, cfg=cfg),
+        forward=fwd, loss=loss,
+        init_cache=functools.partial(ssm_init_cache, cfg),
+        prefill=prefill_fn,
+        decode=decode_fn)
+
+
+def _encdec_bundle(cfg):
+    def fwd(params, batch):
+        enc = encdec.encode(params, batch["frames"], cfg)
+        return encdec.decode_train(params, batch["tokens"], enc, cfg)
+
+    def loss(params, batch):
+        return chunked_xent(params, fwd(params, batch), batch["labels"], cfg)
+
+    def prefill_fn(params, batch, cache):
+        h, cache = encdec.prefill(params, batch["tokens"], batch["frames"],
+                                  cfg, cache)
+        return logits_fn(params, h[:, -1:], cfg), cache
+
+    def decode_fn(params, tokens, cache, lengths):
+        return encdec.decode_step(params, tokens, cfg, cache, lengths)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(encdec.init_params, cfg=cfg),
+        forward=fwd, loss=loss,
+        init_cache=functools.partial(encdec.init_cache, cfg),
+        prefill=prefill_fn, decode=decode_fn)
+
+
+_BUILDERS = {
+    "dense": _lm_bundle,
+    "moe": _lm_bundle,
+    "vlm": _lm_bundle,
+    "ssm": _ssm_bundle,
+    "encdec": _encdec_bundle,
+    "hybrid": _hybrid_bundle,
+}

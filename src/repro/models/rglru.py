@@ -1,0 +1,87 @@
+"""RG-LRU recurrent blocks (RecurrentGemma) — gated linear recurrence.
+
+    r_t = σ(W_r x_t)            (recurrence gate)
+    i_t = σ(W_i x_t)            (input gate)
+    a_t = exp(-c · softplus(Λ) ⊙ r_t)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses `jax.lax.associative_scan` (the recurrence is an affine
+map composition → O(S log S) parallel depth — the sub-quadratic property
+that makes long_500k runnable for this family).  Decode is the single-step
+recurrence with a carried state.
+
+Note (DESIGN.md §5): this gated recurrence is input-dependent (IIR with
+time-varying coefficients), so the paper's FFT convolution does NOT apply to
+it — FFTB integration for hybrids is limited to the conv path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, dense_init
+
+_C = 8.0     # RecurrentGemma's fixed temperature
+
+
+def rglru_init(key, cfg, dtype):
+    D = cfg.d_model
+    R = cfg.d_rnn or D
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (D, R), dtype=dtype),       # input branch
+        "w_gate_in": dense_init(ks[1], (D, R), dtype=dtype),  # gating branch
+        "conv_w": dense_init(ks[2], (cfg.conv_kernel, R), scale=0.5,
+                             dtype=dtype),
+        "w_r": dense_init(ks[3], (R, R), dtype=dtype),
+        "w_i": dense_init(ks[4], (R, R), dtype=dtype),
+        "lam": jnp.full((R,), 0.7, jnp.float32),             # Λ init
+        "w_out": dense_init(ks[5], (R, D), dtype=dtype),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(p, x, cfg, *, state=None):
+    """One recurrent block. x: (B,S,D) → (B,S,D); state carries
+    {"conv": (B,K-1,R), "h": (B,R)} for decode."""
+    B, S, D = x.shape
+    u = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    u, conv_cache = causal_conv1d(
+        u, p["conv_w"], None if state is None else state["conv"])
+
+    a, b = _gates(p, u)                                   # (B,S,R) f32
+    if state is not None and S == 1:
+        h_prev = state["h"]
+        h = a[:, 0] * h_prev + b[:, 0]
+        hs = h[:, None]
+        new_state = {"conv": conv_cache, "h": h}
+    else:
+        # h_t = a_t h_{t-1} + b_t  ⇒ compose (a, b) affine maps
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a2 * a1, a2 * b1 + b2
+        if state is not None:
+            b = b.at[:, 0].add(a[:, 0] * state["h"])
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = b_s
+        new_state = None if state is None else \
+            {"conv": conv_cache, "h": hs[:, -1]}
+    y = (hs * gate.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["w_out"], new_state
+
+
+def rglru_init_state(cfg, batch: int, dtype=jnp.float32):
+    R = cfg.d_rnn or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_kernel - 1, R), dtype),
+            "h": jnp.zeros((batch, R), jnp.float32)}

@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD — state-space duality) blocks, chunked matmul form.
+
+The SSD dual form computes attention-free sequence mixing as chunk-local
+quadratic matmuls plus a linear inter-chunk state recurrence — exactly the
+MXU-friendly decomposition. The depthwise temporal conv optionally routes
+through FFTB's fft_conv (`conv_impl="fft"`), the paper-technique
+integration point for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def _scan(f, init, xs, **kw):
+    kw.setdefault("unroll", True if flags.scan_unroll() else 1)
+    return jax.lax.scan(f, init, xs, **kw)
+
+from .layers import causal_conv1d, dense_init, fft_causal_conv1d, rms_norm
+
+
+def ssm_init(key, cfg, dtype):
+    D = cfg.d_model
+    din = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_nheads
+    conv_dim = din + 2 * N                      # conv over (x, B, C)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * din + 2 * N + H), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim),
+                             scale=0.5, dtype=dtype),
+        "out_proj": dense_init(ks[2], (din, D), dtype=dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.zeros((din,), jnp.float32),
+    }
+
+
+def _split_proj(z, cfg):
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    zx, gate, Bm, Cm, dt = jnp.split(
+        z, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    return zx, gate, Bm, Cm, dt
+
+
+def _segsum(dA):
+    """(..., Q) → (..., Q, Q) lower-triangular cumulative sums:
+    out[i, j] = sum_{j < k <= i} dA[k]."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD sequence mixing.
+
+    xh: (B,S,H,P) inputs, dt: (B,S,H) positive step sizes, A: (H,) < 0,
+    Bm/Cm: (B,S,N) shared across heads (ngroups=1).  Returns (B,S,H,P).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    dA = dtc * A                                             # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic within Q) ----
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)           # (B,nc,Q,Q)
+    M = scores[:, :, None] * Lmat                            # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtc, xc)
+
+    # ---- chunk states ----
+    dA_cum = jnp.cumsum(dA, axis=2)                          # (B,nc,Q,H)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)    # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                        Bc, dtc * decay_to_end, xc)          # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence over nc ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((Bsz, H, N, P), states.dtype)
+    _, s_in = _scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,N,P)
+
+    decay_from_start = jnp.exp(dA_cum)                       # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, decay_from_start, s_in)
+    return (y_intra + y_inter).reshape(Bsz, S, H, P)
+
+
+def ssm_block(p, x, cfg, *, state=None):
+    """One Mamba-2 block. x: (B,S,D).
+
+    state: None (train/prefill from scratch) or dict with "conv" (B,K-1,conv_dim)
+    and "ssm" (B,H,N,P) for single-step decode (S == 1).
+    Returns (y, new_state).
+    """
+    B, S, D = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z = x @ p["in_proj"]
+    zx, gate, Bm, Cm, dt = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([zx, Bm, Cm], axis=-1)
+
+    decode = state is not None and S == 1
+    conv = fft_causal_conv1d if cfg.conv_impl == "fft" and not decode \
+        else causal_conv1d
+    conv_out, conv_cache = conv(
+        conv_in, p["conv_w"], None if state is None else state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    zx, Bm, Cm = jnp.split(conv_out, [din, din + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    xh = zx.reshape(B, S, H, P)
+
+    if decode:
+        s_prev = state["ssm"]                                    # (B,H,N,P)
+        dA = jnp.exp(dt[:, 0] * A)                               # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        s_new = s_prev * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), s_new)
+        y = y[:, None] + p["D_skip"][None, None, :, None] * xh
+        new_state = {"conv": conv_cache, "ssm": s_new}
+    else:
+        y = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                        cfg.ssm_chunk)
+        y = y + p["D_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        if state is not None:       # prefill: also emit final state
+            # recompute final state cheaply from the chunked pass
+            new_state = {"conv": conv_cache,
+                         "ssm": _final_state(xh, dt, A, Bm, Cm)}
+        else:
+            new_state = None
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(gate), p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state
+
+
+def _final_state(xh, dt, A, Bm, Cm):
+    """Final SSM state after a full sequence (for prefill → decode)."""
+    dA = dt * A                                              # (B,S,H)
+    dA_cum = jnp.cumsum(dA, axis=1)
+    decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)       # (B,S,H)
+    return jnp.einsum("bsn,bsh,bshp->bhnp",
+                      Bm.astype(jnp.float32), dt * decay_to_end,
+                      xh.astype(jnp.float32))
+
+
+def ssm_init_state(cfg, batch: int, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state,
+                          cfg.ssm_headdim), jnp.float32),
+    }

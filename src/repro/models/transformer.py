@@ -1,0 +1,216 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbones).
+
+Layers are *scanned* (stacked params, `jax.lax.scan` over the layer dim) so
+HLO size and compile time are depth-independent — required to lower 96-layer
+nemotron at 32k within this container.  Remat wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def _scan(f, init, xs, **kw):
+    kw.setdefault("unroll", True if flags.scan_unroll() else 1)
+    return jax.lax.scan(f, init, xs, **kw)
+
+from . import moe as moe_mod
+from .attention import blocked_attention, decode_attention
+from .layers import apply_rope, dense_init, mlp_apply, mlp_init, rms_norm
+from repro.sharding import ctx
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- params
+def init_layer(key, cfg):
+    dt = _dtype(cfg)
+    D, H, Kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dt),
+        "wk": dense_init(ks[1], (D, Kh * hd), dtype=dt),
+        "wv": dense_init(ks[2], (D, Kh * hd), dtype=dt),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dt),
+        "ln2": jnp.zeros((D,), jnp.float32),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[4], cfg, dt)
+    else:
+        p["mlp"] = mlp_init(ks[4], D, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def init_params(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "embed": dense_init(ks[1], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab),
+                                       scale=0.02, dtype=dt)
+    return params
+
+
+# ----------------------------------------------------------------- layer
+def attn_apply(p, x, cfg, positions, *, window: int = 0, cache=None,
+               lengths=None):
+    """Self-attention sublayer.  cache: (k, v) of (B, Smax, Kh, hd) → decode
+    (S==1) or prefill (cache returned filled).  Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, Kh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if S > 1:
+        # Megatron-SP boundary: gather seq, keep weights sharded; pinning
+        # the projections prevents GSPMD gathering full (D, H·hd) weights
+        h = ctx.constrain(h, "batch", None, None)
+
+        def pin(t):
+            return ctx.constrain(t, "batch", None, "model")
+    else:
+        def pin(t):
+            return t
+    q = pin(h @ p["wq"]).reshape(B, S, H, hd)
+    k = pin(h @ p["wk"]).reshape(B, S, Kh, hd)
+    v = pin(h @ p["wv"]).reshape(B, S, Kh, hd)
+    if S == 1:
+        # decode: match the hd-sharded KV-cache layout so the cache scatter
+        # stays local (unpinned, GSPMD gathered full-hd k/v per layer —
+        # 2.25 GiB/layer transients on nemotron decode_32k, §Perf)
+        q = ctx.constrain(q, "batch", None, "model", None)
+        k = ctx.constrain(k, "batch", None, None, "model")
+        v = ctx.constrain(v, "batch", None, None, "model")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        o = blocked_attention(q, k, v, causal=True, window=window)
+        new_cache = None
+    elif S == 1:                                   # decode step
+        ck, cv = cache
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, lengths].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[bidx, lengths].set(v[:, 0].astype(cv.dtype))
+        o = decode_attention(q, ck, cv, lengths + 1, window=window)
+        new_cache = (ck, cv)
+    else:                                          # prefill, cache filled
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.astype(ck.dtype), 0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.astype(cv.dtype), 0, 1)
+        o = blocked_attention(q, k, v, causal=True, window=window)
+        new_cache = (ck, cv)
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+def layer_apply(p, x, cfg, positions, *, window: int = 0, cache=None,
+                lengths=None):
+    a, new_cache = attn_apply(p, x, cfg, positions, window=window,
+                              cache=cache, lengths=lengths)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f = moe_mod.moe_apply(p["moe"], h, cfg)
+    else:
+        f = mlp_apply(p["mlp"], h, cfg.activation)
+    return x + f, new_cache
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------- forward
+def forward(params, tokens, cfg, *, embeds=None):
+    """tokens: (B, S) → final hidden states (B, S, D).
+
+    embeds: optional (B, S_img, D) precomputed frontend embeddings (VLM stub)
+    prepended to the token embeddings.
+    """
+    x = params["embed"][tokens]
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = ctx.constrain_act(x)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        y, _ = layer_apply(lp, x, cfg, positions)
+        return ctx.constrain_act(y), None
+
+    x, _ = _scan(_remat(body, cfg), x, params["layers"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def logits_fn(params, h, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+# ------------------------------------------------------------- serving
+def init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    L, Kh, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
+    shape = (L, batch, capacity, Kh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, tokens, cfg, cache, *, embeds=None):
+    """Forward pass that also fills the KV cache. Returns (hidden, cache)."""
+    x = params["embed"][tokens]
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = ctx.constrain_act(x)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, scans):
+        lp, ck, cv = scans
+        y, (ck, cv) = layer_apply(lp, x, cfg, positions, cache=(ck, cv))
+        return ctx.constrain_act(y), (ck, cv)
+
+    x, (ck, cv) = _scan(_remat(body, cfg), x,
+                               (params["layers"], cache["k"], cache["v"]))
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), {"k": ck, "v": cv}
+
+
+def decode_step(params, tokens, cfg, cache, lengths):
+    """tokens: (B, 1); lengths: (B,) current context lengths.
+    Returns (logits (B,1,V), new cache)."""
+    x = params["embed"][tokens]
+    positions = lengths[:, None]
+
+    def body(x, scans):
+        lp, ck, cv = scans
+        y, (ck, cv) = layer_apply(lp, x, cfg, positions, cache=(ck, cv),
+                                  lengths=lengths)
+        return y, (ck, cv)
+
+    x, (ck, cv) = _scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, h, cfg), {"k": ck, "v": cv}

@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback, for cross-pod all-reduce.
+
+At 1000+ nodes the pod-crossing gradient reduction is DCN-bound; int8
+per-tensor quantization cuts it 4× vs f32 (2× vs bf16).  Error feedback
+(residual accumulation) keeps SGD-style convergence: the quantization error
+of step t is added back to the gradient of step t+1, so the *accumulated*
+update is unbiased.
+
+compress/decompress are pure and jit-able; the trainer threads the residual
+state alongside the optimizer state (sharded identically to the grads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, residuals):
+    """→ (compressed pytree of (int8, scale), new_residuals).
+
+    The compressed representation is what crosses the pod boundary; the
+    residual keeps the information lost to quantization for the next step.
+    """
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _quantize(x)
+        err = x - _dequantize(q, s)
+        return (q, s), err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = tdef.unflatten([o[0] for o in outs])
+    res = tdef.unflatten([o[1] for o in outs])
+    return comp, res
+
+
+def decompress_grads(comp):
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2 and \
+            getattr(x[0], "dtype", None) == jnp.int8
+    return jax.tree.map(lambda qs: _dequantize(*qs), comp,
+                        is_leaf=is_pair)
+
+
+def compressed_bytes(grads) -> int:
+    """Bytes crossing the wire with int8 compression (for the comm model)."""
+    return sum(x.size + 4 for x in jax.tree.leaves(grads))

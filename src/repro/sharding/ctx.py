@@ -1,0 +1,89 @@
+"""Ambient sharding context: lets model code pin activation shardings
+without threading mesh objects through every layer.
+
+GSPMD propagation from param/input shardings alone mis-places the batch
+dim around gather/one-hot patterns (observed: the xent chunk replicating
+the global batch → 144 GiB temps).  The trainer/dry-run installs the mesh
++ batch axes here; models call `constrain_batch`/`constrain` at the few
+load-bearing points (embed output, loss chunks, layer boundaries)."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Mesh | None = None
+_BATCH_AXES = None       # tuple[str,...] | None
+_SEQ_AXIS = None         # str | None — sequence parallelism (Megatron-SP)
+
+
+@contextlib.contextmanager
+def use(mesh: Mesh, batch_axes, seq_axis=None):
+    global _MESH, _BATCH_AXES, _SEQ_AXIS
+    old = (_MESH, _BATCH_AXES, _SEQ_AXIS)
+    _MESH, _BATCH_AXES, _SEQ_AXIS = mesh, batch_axes, seq_axis
+    try:
+        yield
+    finally:
+        _MESH, _BATCH_AXES, _SEQ_AXIS = old
+
+
+def active() -> bool:
+    return _MESH is not None
+
+
+def constrain(x, *entries):
+    """with_sharding_constraint(x, P(*entries)) if a mesh is installed.
+
+    Entries may use the sentinel "batch" → the installed batch axes.
+    """
+    if _MESH is None:
+        return x
+    spec = []
+    for e in entries:
+        if e == "batch":
+            spec.append(_BATCH_AXES)
+        elif isinstance(e, str) and e not in _MESH.axis_names:
+            spec.append(None)
+        else:
+            spec.append(e)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))
+
+
+def axis_size(name: str):
+    """Size of a mesh axis, or None when no mesh is installed."""
+    if _MESH is None or name not in _MESH.axis_names:
+        return None
+    return _MESH.shape[name]
+
+
+def batch_size():
+    if _MESH is None or not _BATCH_AXES:
+        return None
+    n = 1
+    for a in _BATCH_AXES:
+        n *= _MESH.shape[a]
+    return n
+
+
+def constrain_batch(x):
+    """Shard dim 0 over the batch axes, replicate the rest."""
+    if _MESH is None:
+        return x
+    return constrain(x, "batch", *([None] * (x.ndim - 1)))
+
+
+def constrain_act(x):
+    """Layer-boundary activations (B, S, D): batch over DP axes and —
+    when sequence parallelism is on — S over the model axis (Megatron-SP:
+    the residual stream and the remat stack shrink by the TP degree; GSPMD
+    inserts the all-gather/reduce-scatter pairs around attention/MLP)."""
+    if _MESH is None:
+        return x
+    if (_SEQ_AXIS is not None and x.ndim == 3
+            and x.shape[1] % _MESH.shape[_SEQ_AXIS] == 0):
+        return constrain(x, "batch", _SEQ_AXIS,
+                         *([None] * (x.ndim - 2)))
+    return constrain_batch(x)

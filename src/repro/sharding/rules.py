@@ -1,0 +1,163 @@
+"""Parallelism rules: DP(pod,data) × TP/EP(model) × FSDP(data).
+
+Param specs are derived from leaf *path names* (the same rule table covers
+every family since modules share naming conventions).  The model runs under
+`jax.jit` with NamedSharding constraints (GSPMD auto-partitioning tolerates
+non-divisible dims — e.g. 8 KV heads on a 16-way model axis, 40 experts on
+16 — by padding); the FFTB core keeps explicit shard_map collectives.
+
+Weights: 2-D leaves shard (in_dim → "data" [FSDP], out_dim → "model" [TP])
+or the transpose for output projections, vocab over "model"; stacked-layer
+leading dims are unsharded.  `pod` is pure DP: params replicated across
+pods, gradient all-reduce crosses pods (hierarchical under GSPMD).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name → spec for the *trailing* dims (leading stack dims padded None).
+# "fsdp" resolves to ("pod","data") on multi-pod meshes (ZeRO spans pods),
+# plain "data" otherwise.
+_RULES: list[tuple[str, tuple]] = [
+    (r"^(embed)$",                       ("model", "fsdp")),
+    (r"^(lm_head)$",                     ("fsdp", "model")),
+    # column-parallel (input proj): in_dim FSDP, out_dim TP
+    (r"^(wq|wk|wv|w_up|w_gate|w_x|w_gate_in|in_proj|w_r|w_i)$",
+     ("fsdp", "model")),
+    # row-parallel (output proj): in_dim TP, out_dim FSDP
+    (r"^(wo|w_down|out_proj|w_out)$",    ("model", "fsdp")),
+    (r"^(router)$",                      ("fsdp", None)),
+    (r"^(conv_w)$",                      (None, "model")),
+]
+# MoE expert-stacked tensors (E, D, F)/(E, F, D): experts over "model" (EP)
+_MOE_RULES = {
+    "w_up": ("model", "fsdp", None),
+    "w_gate": ("model", "fsdp", None),
+    "w_down": ("model", None, "fsdp"),
+}
+
+
+def _resolve(entry, mesh: Mesh | None):
+    if entry != "fsdp":
+        return entry
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def _axes_size(entry, mesh: Mesh) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def drop_indivisible(spec: P, shape, mesh: Mesh | None) -> P:
+    """jit in_shardings reject uneven dims — replicate those instead.
+
+    (with_sharding_constraint tolerates padding; argument shardings don't,
+    e.g. granite's vocab 49155 or 8 KV heads on the 16-way model axis.)
+    """
+    if mesh is None:
+        return spec
+    ent = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, ent):
+        out.append(e if (e is None or dim % _axes_size(e, mesh) == 0)
+                   else None)
+    return P(*out)
+
+
+def _leaf_spec(path, leaf, mesh=None) -> P:
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    name = names[-1]
+    ndim = leaf.ndim
+    in_moe = "moe" in names
+    base = None
+    if in_moe and name in _MOE_RULES:
+        base = _MOE_RULES[name]
+    else:
+        for pat, spec in _RULES:
+            if re.match(pat, name):
+                base = spec
+                break
+    if base is None or ndim < len(base):
+        return P()                                   # replicate (norms etc.)
+    pad = (None,) * (ndim - len(base))
+    spec = P(*(pad + tuple(_resolve(e, mesh) for e in base)))
+    return drop_indivisible(spec, leaf.shape, mesh)
+
+
+def param_specs(params, mesh: Mesh | None = None) -> dict:
+    """Pytree of PartitionSpec matching ``params`` (shapes or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_spec(p, l, mesh), params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+# ------------------------------------------------------------- activations
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axis(mesh: Mesh, batch: int):
+    """Shard batch over (pod, data) when divisible, else replicate."""
+    axes = _dp_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if (batch % n == 0 and batch >= n) else None
+
+
+def data_specs(cfg, shape, mesh: Mesh) -> dict:
+    """PartitionSpecs for one batch of inputs for (cfg × shape)."""
+    b = batch_axis(mesh, shape.batch)
+    specs = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = P(b, None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(cfg, batch: int, mesh: Mesh, cache) -> dict:
+    """KV/state cache specs: batch over DP axes, heads/features over model.
+
+    KV-head counts often don't divide the model axis (GQA kv=8 on 16) —
+    fall back to sharding head_dim, then replicate (drop_indivisible)."""
+    b = batch_axis(mesh, batch)
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv"):      # (L, B, S, Kh, hd)
+            s = P(None, b, None, "model", None)
+            if leaf.shape[3] % mesh.shape["model"]:
+                s = P(None, b, None, None, "model")
+        elif name == "ssm":                     # (L, B, H, N, P)
+            s = P(None, b, "model", None, None)
+        elif name == "conv":                    # (L, B, K-1, C)
+            s = P(None, b, None, "model")
+        elif name == "h":                       # (L, B, R)
+            s = P(None, b, "model")
+        else:
+            s = P(*((None,) * nd))
+        return drop_indivisible(s, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def logical_axis_env(mesh: Mesh):
+    """Context manager: set mesh for with_sharding_constraint use."""
+    return jax.sharding.use_mesh(mesh)

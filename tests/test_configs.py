@@ -1,0 +1,98 @@
+"""Assignment-exactness tests: every arch config carries the published
+numbers, and the dry-run harness pieces behave (HLO parser, input specs)."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, all_configs, get_config
+
+EXACT = {
+    "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv=8,
+                      d_ff=25600, vocab=151936, qk_norm=True,
+                      family="dense"),
+    "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32, n_kv=4,
+                           d_ff=5632, vocab=32000, family="dense"),
+    "nemotron-4-340b": dict(n_layers=96, d_model=18432, n_heads=96, n_kv=8,
+                            d_ff=73728, vocab=256000, activation="relu2",
+                            family="dense"),
+    "granite-3-2b": dict(n_layers=40, d_model=2048, n_heads=32, n_kv=8,
+                         d_ff=8192, vocab=49155, family="dense"),
+    "pixtral-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv=8,
+                        d_ff=14336, vocab=131072, family="vlm"),
+    "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                 n_kv=8, d_ff=512, vocab=49155,
+                                 n_experts=40, top_k=8, family="moe"),
+    "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48, n_kv=8,
+                      d_ff=10752, vocab=100352, n_experts=16, top_k=4,
+                      family="moe"),
+    "whisper-small": dict(n_layers=12, d_model=768, n_heads=12, n_kv=12,
+                          d_ff=3072, vocab=51865, enc_layers=12,
+                          enc_seq=1500, family="encdec"),
+    "recurrentgemma-9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                              n_kv=1, d_ff=12288, vocab=256000,
+                              local_window=2048, family="hybrid",
+                              block_pattern=("rec", "rec", "attn")),
+    "mamba2-370m": dict(n_layers=48, d_model=1024, d_ff=0, vocab=50280,
+                        ssm_state=128, family="ssm"),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_config(arch):
+    cfg = get_config(arch)
+    for field, want in EXACT[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+def test_all_archs_registered():
+    assert set(all_configs()) >= set(ARCH_IDS)
+
+
+def test_shapes_exact():
+    assert (SHAPES["train_4k"].seq, SHAPES["train_4k"].batch) == (4096, 256)
+    assert (SHAPES["prefill_32k"].seq, SHAPES["prefill_32k"].batch) \
+        == (32768, 32)
+    assert (SHAPES["decode_32k"].seq, SHAPES["decode_32k"].batch) \
+        == (32768, 128)
+    assert (SHAPES["long_500k"].seq, SHAPES["long_500k"].batch) \
+        == (524288, 1)
+
+
+def test_paper_workload_config():
+    from repro.configs.fftb_paper import CONFIG
+    assert (CONFIG.n, CONFIG.diameter, CONFIG.nb) == (256, 128, 256)
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[64,512]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %a2a = f32[32,32]{1,0} all-to-all(%z), replica_groups={{0,1},{2,3}}
+  %cp = (f32[16,16]{1,0}, f32[16,16]{1,0}) collective-permute-start(%w), source_target_pairs={{0,1}}
+  %other = f32[9,9] add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 64 * 512 * 2 // 8
+    assert out["all-to-all"] == 32 * 32 * 4
+    assert out["collective-permute"] == 16 * 16 * 4     # start pair halved
+
+
+def test_input_specs_shapes():
+    from repro.launch.dryrun import input_specs
+    b = input_specs("qwen3-32b", "train_4k")
+    assert b["tokens"].shape == (256, 4096)
+    b = input_specs("pixtral-12b", "train_4k")
+    assert b["tokens"].shape == (256, 4096 - 1024)
+    assert b["image_embeds"].shape == (256, 1024, 5120)
+    b = input_specs("whisper-small", "prefill_32k")
+    assert b["frames"].shape == (32, 1500, 768)
+    b = input_specs("mamba2-370m", "long_500k")
+    assert b["tokens"].shape == (1, 1)
+
+
+def test_reduced_configs_stay_in_family():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        r = cfg.reduced()
+        assert r.family == cfg.family
+        assert r.d_model <= 128 and r.vocab <= 1024

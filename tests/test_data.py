@@ -1,0 +1,68 @@
+"""Data pipeline: determinism, sharding, restart-safety, memmap source."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, Pipeline
+
+
+def test_labels_shift():
+    p = Pipeline(DataConfig(vocab=50, seq=8, global_batch=2))
+    b = p.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_steps_differ():
+    p = Pipeline(DataConfig(vocab=50, seq=8, global_batch=2))
+    assert not np.array_equal(p.batch_at(0)["tokens"],
+                              p.batch_at(1)["tokens"])
+
+
+def test_seeds_differ():
+    a = Pipeline(DataConfig(vocab=50, seq=8, global_batch=2, seed=0))
+    b = Pipeline(DataConfig(vocab=50, seq=8, global_batch=2, seed=1))
+    assert not np.array_equal(a.batch_at(0)["tokens"],
+                              b.batch_at(0)["tokens"])
+
+
+def test_restart_mid_epoch_identical():
+    """No iterator state: recreating the pipeline reproduces any step."""
+    cfg = DataConfig(vocab=1000, seq=16, global_batch=4)
+    p1 = Pipeline(cfg)
+    seq = [p1.batch_at(s)["tokens"] for s in range(5)]
+    p2 = Pipeline(cfg)          # "restarted" process
+    np.testing.assert_array_equal(p2.batch_at(3)["tokens"], seq[3])
+
+
+def test_shards_partition_batch():
+    cfg = DataConfig(vocab=1000, seq=8, global_batch=8)
+    full = Pipeline(cfg).batch_at(7)["tokens"]
+    parts = [Pipeline(cfg, s, 4).batch_at(7)["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_backup_worker_reassignment():
+    cfg = DataConfig(vocab=1000, seq=8, global_batch=8)
+    healthy = Pipeline(cfg, 0, 4)
+    dead_batch = Pipeline(cfg, 2, 4).batch_at(11)
+    recomputed = healthy.reassign(2, 11)
+    np.testing.assert_array_equal(recomputed["tokens"],
+                                  dead_batch["tokens"])
+
+
+def test_memmap_source(tmp_path):
+    data = np.arange(10000, dtype=np.int32) % 97
+    f = tmp_path / "tokens.bin"
+    data.tofile(f)
+    cfg = DataConfig(vocab=97, seq=16, global_batch=4, source="memmap",
+                     path=str(f))
+    p = Pipeline(cfg)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (4, 16)
+    assert (b["tokens"] < 97).all()
+    b2 = Pipeline(cfg).batch_at(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+
+def test_indivisible_shards_rejected():
+    with pytest.raises(ValueError):
+        Pipeline(DataConfig(vocab=10, seq=4, global_batch=4), 0, 3)

@@ -1,0 +1,90 @@
+"""Per-kernel sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.dft_matmul import dft_matmul
+
+
+def _cx(rng, shape):
+    return (rng.standard_normal(shape)
+            + 1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+@pytest.mark.parametrize("B", [1, 8, 33, 256])
+@pytest.mark.parametrize("n", [8, 16, 128])
+def test_dft_apply_square_shapes(B, n):
+    rng = np.random.default_rng(B * 1000 + n)
+    x = _cx(rng, (B, n))
+    y = np.asarray(ops.dft_apply(jnp.asarray(x)))
+    r = np.asarray(ref.dft_apply_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(y, r, rtol=2e-4, atol=2e-4 * n)
+
+
+@pytest.mark.parametrize("n_in,n_out", [(8, 32), (16, 16), (32, 8),
+                                        (24, 48), (128, 64)])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_dft_apply_rectangular(n_in, n_out, inverse):
+    rng = np.random.default_rng(n_in * 100 + n_out + inverse)
+    x = _cx(rng, (16, n_in))
+    y = np.asarray(ops.dft_apply(jnp.asarray(x), n_out, inverse=inverse))
+    r = np.asarray(ref.dft_apply_ref(jnp.asarray(x), n_out,
+                                     inverse=inverse))
+    np.testing.assert_allclose(y, r, rtol=2e-4, atol=1e-5 * max(n_in, 1))
+
+
+def test_raw_kernel_vs_complex_matmul():
+    rng = np.random.default_rng(7)
+    B, K, N = 64, 32, 48
+    xr = rng.standard_normal((B, K)).astype(np.float32)
+    xi = rng.standard_normal((B, K)).astype(np.float32)
+    wr = rng.standard_normal((N, K)).astype(np.float32)
+    wi = rng.standard_normal((N, K)).astype(np.float32)
+    yr, yi = dft_matmul(jnp.asarray(xr), jnp.asarray(xi), jnp.asarray(wr),
+                        jnp.asarray(wi), bm=32, bn=16, interpret=True)
+    rr, ri = ref.complex_matmul_ref(xr, xi, wr, wi)
+    np.testing.assert_allclose(np.asarray(yr), rr, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(yi), ri, rtol=1e-4, atol=1e-3)
+
+
+def test_kernel_twiddle_epilogue():
+    rng = np.random.default_rng(8)
+    B, K, N = 32, 16, 16
+    xr, xi, wr, wi, tr, ti = [
+        rng.standard_normal(s).astype(np.float32)
+        for s in [(B, K), (B, K), (N, K), (N, K), (B, N), (B, N)]]
+    yr, yi = dft_matmul(*map(jnp.asarray, (xr, xi, wr, wi, tr, ti)),
+                        bm=16, bn=16, interpret=True)
+    rr, ri = ref.complex_matmul_ref(xr, xi, wr, wi)
+    err = np.abs(np.asarray(yr) - (rr * tr - ri * ti)).max()
+    eri = np.abs(np.asarray(yi) - (rr * ti + ri * tr)).max()
+    assert err < 1e-3 and eri < 1e-3
+
+
+@pytest.mark.parametrize("n", [64, 360, 1024])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_four_step_vs_fft(n, inverse):
+    rng = np.random.default_rng(n + inverse)
+    x = _cx(rng, (4, n))
+    y = np.asarray(ops.four_step_dft(jnp.asarray(x), inverse=inverse))
+    r = np.asarray(ref.four_step_ref(jnp.asarray(x), inverse=inverse))
+    scale = np.abs(r).max()
+    np.testing.assert_allclose(y, r, rtol=0, atol=3e-6 * n * max(scale, 1))
+
+
+def test_four_step_rejects_prime():
+    with pytest.raises(ValueError):
+        ops.four_step_dft(jnp.zeros((2, 13), jnp.complex64))
+
+
+def test_local_dft_backends_agree():
+    from repro.core.local_fft import local_dft
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(_cx(rng, (3, 5, 24)))
+    outs = [np.asarray(local_dft(x, 2, 32, backend=b))
+            for b in ("jnp", "matmul", "pallas")]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=1e-4)

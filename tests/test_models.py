@@ -1,0 +1,226 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward parity."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, all_configs, applicable, \
+    get_config
+from repro.models.model_zoo import build
+from repro.models.transformer import logits_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    b["labels"] = jnp.roll(b["tokens"], -1, axis=1)
+    if cfg.family == "vlm":
+        b["image_embeds"] = jnp.full((B, cfg.n_img_tokens, cfg.d_model),
+                                     0.01, jnp.float32)
+    if cfg.family == "encdec":
+        b["frames"] = jnp.full((B, cfg.enc_seq, cfg.d_model), 0.01,
+                               jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import init_opt_state, make_train_step
+    cfg = get_config(arch).reduced()
+    m = build(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    h = m.forward(params, batch)
+    S_out = 32 + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    assert h.shape == (2, S_out, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+    step = make_train_step(m, AdamWConfig(warmup_steps=0, total_steps=10),
+                           donate=False)
+    opt = init_opt_state(params)
+    p2, o2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(o2["step"]) == 1
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, p2))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_teacher_forced(arch):
+    """Token-by-token decode logits == full forward logits (per family)."""
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.n_experts))
+    m = build(cfg)
+    params = m.init(KEY)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    h = m.forward(params, batch)
+    full = logits_fn(params, h, cfg)
+    extra = cfg.n_img_tokens if cfg.family == "vlm" else 0
+    P = S // 2
+    cache = m.init_cache(B, S + extra + 2, jnp.float32)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :P]
+    lg, cache = m.prefill(params, pre, cache)
+    errs = [float(jnp.abs(lg[:, 0] - full[:, extra + P - 1]).max())]
+    lengths = jnp.full((B,), P + extra, jnp.int32)
+    for t in range(P, S):
+        lg, cache = m.decode(params, batch["tokens"][:, t:t + 1], cache,
+                             lengths)
+        lengths = lengths + 1
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, extra + t]).max()))
+    assert max(errs) < 5e-5, f"{arch}: {errs}"
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                              capacity_factor=0.5)
+    m = build(cfg)
+    params = m.init(KEY)
+    loss = m.loss(params, _batch(cfg))
+    assert bool(jnp.isfinite(loss))
+
+
+def test_local_window_attention_masks_past():
+    """Hybrid local attention must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
+                              local_window=4)
+    m = build(cfg)
+    params = m.init(KEY)
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, cfg.vocab, (1, 24))
+    t2 = t1.copy()
+    t2[0, :8] = rng.integers(0, cfg.vocab, 8)   # perturb far past
+    h1 = m.forward(params, {"tokens": jnp.asarray(t1, jnp.int32)})
+    h2 = m.forward(params, {"tokens": jnp.asarray(t2, jnp.int32)})
+    # hybrid recurrence carries state, so allow small drift; attention
+    # itself is windowed — late positions must NOT match for rglru but the
+    # attention contribution of tokens <8 is zero. Check instead that a
+    # pure-attention model with a window is exactly invariant:
+    dcfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced())
+    from repro.models.attention import blocked_attention
+    q = jnp.asarray(rng.standard_normal((1, 24, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 24, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 24, 2, 8)), jnp.float32)
+    o1 = blocked_attention(q, k, v, causal=True, window=4, block=8)
+    k2 = k.at[:, :8].set(0.0)
+    v2 = v.at[:, :8].set(0.0)
+    o2 = blocked_attention(q, k2, v2, causal=True, window=4, block=8)
+    np.testing.assert_allclose(np.asarray(o1[:, 16:]),
+                               np.asarray(o2[:, 16:]), atol=1e-6)
+
+
+def test_blocked_attention_matches_naive():
+    from repro.models.attention import blocked_attention
+    rng = np.random.default_rng(5)
+    B, S, H, Kh, D = 2, 32, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Kh, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Kh, D)), jnp.float32)
+    o = blocked_attention(q, k, v, causal=True, block=8)
+    # naive reference
+    kr = jnp.repeat(k, H // Kh, 2)
+    vr = jnp.repeat(v, H // Kh, 2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(D)
+    mask = np.tril(np.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vr)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref), atol=2e-5)
+
+
+def test_ssd_chunked_matches_sequential_scan():
+    """Mamba-2 SSD chunked dual form vs naive recurrence."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(6)
+    B, S, H, P, N = 1, 32, 2, 4, 8
+    x = rng.standard_normal((B, S, H, P)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((B, S, H))).astype(np.float32) * 0.5
+    A = -np.abs(rng.standard_normal(H)).astype(np.float32)
+    Bm = rng.standard_normal((B, S, N)).astype(np.float32)
+    Cm = rng.standard_normal((B, S, N)).astype(np.float32)
+    y = np.asarray(ssd_chunked(*map(jnp.asarray, (x, dt, A, Bm, Cm)), 8))
+    # sequential reference
+    s = np.zeros((B, H, N, P), np.float32)
+    ref = np.zeros_like(x)
+    for t in range(S):
+        dA = np.exp(dt[:, t] * A)                       # (B,H)
+        s = s * dA[..., None, None] + np.einsum(
+            "bn,bh,bhp->bhnp", Bm[:, t], dt[:, t], x[:, t])
+        ref[:, t] = np.einsum("bn,bhnp->bhp", Cm[:, t], s)
+    np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3)
+
+
+def test_rglru_scan_matches_sequential():
+    from repro.models.rglru import rglru_block, rglru_init, rglru_init_state
+    from repro.configs.base import get_config
+    cfg = get_config("recurrentgemma-9b").reduced()
+    p = rglru_init(KEY, cfg, jnp.float32)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 12, cfg.d_model)), jnp.float32)
+    y_par, _ = rglru_block(p, x, cfg)
+    st = rglru_init_state(cfg, 2)
+    outs = []
+    for t in range(12):
+        y, st = rglru_block(p, x[:, t:t + 1], cfg, state=st)
+        outs.append(np.asarray(y))
+    y_seq = np.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), y_seq, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_long_500k_applicability_rule():
+    ok = {a: applicable(get_config(a), SHAPES["long_500k"])[0]
+          for a in ARCH_IDS}
+    assert ok == {
+        "qwen3-32b": False, "tinyllama-1.1b": False,
+        "nemotron-4-340b": False, "granite-3-2b": False,
+        "pixtral-12b": False, "granite-moe-3b-a800m": False,
+        "dbrx-132b": False, "whisper-small": False,
+        "recurrentgemma-9b": True, "mamba2-370m": True,
+    }
+
+
+def test_param_counts_match_analytic():
+    for arch in ["tinyllama-1.1b", "mamba2-370m"]:
+        cfg = get_config(arch).reduced()
+        m = build(cfg)
+        params = m.init(KEY)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(actual - est) / actual < 0.05, (arch, actual, est)
+
+
+def test_full_config_param_counts_sane():
+    # published sizes (±20%: head_dim/tie conventions differ)
+    expect = {"tinyllama-1.1b": 1.1e9, "qwen3-32b": 32e9,
+              "nemotron-4-340b": 340e9, "dbrx-132b": 132e9,
+              "mamba2-370m": 370e6}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * n < got < 1.35 * n, (arch, got, n)
+
+
+def test_fft_conv_option_for_mamba():
+    """conv_impl='fft' (FFTB integration) ≡ direct conv."""
+    cfg = get_config("mamba2-370m").reduced()
+    m1 = build(cfg)
+    params = m1.init(KEY)
+    b = _batch(cfg, 2, 16)
+    h1 = m1.forward(params, b)
+    cfg2 = dataclasses.replace(cfg, conv_impl="fft")
+    m2 = build(cfg2)
+    h2 = m2.forward(params, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-3,
+                               atol=2e-3)

@@ -1,0 +1,133 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SphereDomain, fft_conv, local_dft
+from repro.data.pipeline import DataConfig, Pipeline
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def _cx(seed, shape):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape)
+            + 1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16, 24]),
+       st.sampled_from([1, 3, 8]))
+@settings(**SET)
+def test_dft_linearity(seed, n, b):
+    x = _cx(seed, (b, n))
+    y = _cx(seed + 1, (b, n))
+    a = 0.7 - 0.3j
+    lhs = local_dft(jnp.asarray(a * x + y), -1)
+    rhs = a * local_dft(jnp.asarray(x), -1) + local_dft(jnp.asarray(y), -1)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3 * n)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 32]))
+@settings(**SET)
+def test_parseval_energy(seed, n):
+    x = _cx(seed, (2, n))
+    X = np.asarray(local_dft(jnp.asarray(x), -1))
+    e_t = (np.abs(x) ** 2).sum(axis=-1)
+    e_f = (np.abs(X) ** 2).sum(axis=-1) / n
+    np.testing.assert_allclose(e_t, e_f, rtol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16]))
+@settings(**SET)
+def test_inverse_roundtrip(seed, n):
+    x = _cx(seed, (2, n))
+    y = local_dft(local_dft(jnp.asarray(x), -1), -1, inverse=True)
+    np.testing.assert_allclose(np.asarray(y), x, rtol=1e-3, atol=1e-4 * n)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([6, 8, 12, 16]))
+@settings(**SET)
+def test_pad_fusion_identity(seed, m):
+    """Rect DFT (pad fused) == DFT of explicitly padded input — the
+    correctness core of the paper's staged-padding trick."""
+    n = 2 * m
+    x = _cx(seed, (3, m))
+    fused = local_dft(jnp.asarray(x), -1, n)
+    padded = local_dft(jnp.asarray(np.pad(x, ((0, 0), (0, n - m)))), -1)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(padded),
+                               rtol=1e-3, atol=1e-4 * n)
+
+
+@given(st.integers(2, 30))
+@settings(max_examples=10, deadline=None)
+def test_sphere_mask_matches_offsets(d):
+    sph = SphereDomain.from_diameter(d)
+    assert sph.mask().sum() == sph.npacked
+    assert sph.extents == (d, d, d)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([2, 3, 4]))
+@settings(**SET)
+def test_fft_conv_matches_direct(seed, S, K):
+    rng = np.random.default_rng(seed)
+    C = 3
+    x = rng.standard_normal((2, S, C)).astype(np.float32)
+    w = rng.standard_normal((K, C)).astype(np.float32)
+    from repro.models.layers import causal_conv1d, fft_causal_conv1d
+    y1, _ = causal_conv1d(jnp.asarray(x), jnp.asarray(w))
+    y2, _ = fft_causal_conv1d(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-3)
+
+
+@given(st.integers(0, 1000), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_pipeline_deterministic_and_sharded(step, n_shards):
+    cfg = DataConfig(vocab=100, seq=16, global_batch=8, seed=3)
+    full = Pipeline(cfg, 0, 1).batch_at(step)
+    parts = [Pipeline(cfg, s, n_shards).batch_at(step)["tokens"]
+             for s in range(n_shards)] if 8 % n_shards == 0 else None
+    if parts is not None:
+        np.testing.assert_array_equal(np.concatenate(parts),
+                                      full["tokens"])
+    again = Pipeline(cfg, 0, 1).batch_at(step)
+    np.testing.assert_array_equal(full["tokens"], again["tokens"])
+    np.testing.assert_array_equal(full["labels"][:, :-1],
+                                  full["tokens"][:, 1:])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_compression_error_feedback_unbiased(seed):
+    """Over T steps, sum(dequantized) ≈ sum(grads): residual stays bounded."""
+    from repro.optim.compression import (compress_grads, decompress_grads,
+                                         init_residuals)
+    rng = np.random.default_rng(seed)
+    g_sum = np.zeros((16,), np.float32)
+    q_sum = np.zeros((16,), np.float32)
+    res = init_residuals({"g": jnp.zeros((16,))})
+    for t in range(8):
+        g = rng.standard_normal(16).astype(np.float32)
+        comp, res = compress_grads({"g": jnp.asarray(g)}, res)
+        dq = np.asarray(decompress_grads(comp)["g"])
+        g_sum += g
+        q_sum += dq
+    resid = np.abs(np.asarray(res["g"])).max()
+    # residual is bounded by one quantization step of the last tensor
+    assert np.abs(g_sum - q_sum).max() <= resid + 1e-5
+    assert resid < 0.2
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_straggler_monitor_flags_outliers(seed, k):
+    from repro.train.trainer import StragglerMonitor
+    mon = StragglerMonitor(sigma=3.0)
+    rng = np.random.default_rng(seed)
+    for i in range(20):
+        mon.observe(i, 0.1 + 0.001 * rng.standard_normal())
+    assert mon.observe(100, 10.0 * k) is True

@@ -1,0 +1,150 @@
+"""Sharding rules: param specs, divisibility fallback, FSDP resolution,
+batch-axis logic, and an end-to-end distributed train step (subprocess)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.models.model_zoo import build
+from repro.sharding import rules
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mesh(shape, names):
+    return AbstractMesh(shape, names)
+
+
+SINGLE = _mesh((16, 16), ("data", "model"))
+MULTI = _mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="module")
+def llama_shapes():
+    cfg = get_config("tinyllama-1.1b")
+    bundle = build(cfg)
+    return jax.eval_shape(bundle.init, KEY)
+
+
+def test_param_specs_tp_fsdp(llama_shapes):
+    specs = rules.param_specs(llama_shapes, SINGLE)
+    assert specs["embed"] == P("model", "data")
+    assert specs["layers"]["wq"] == P(None, "data", "model")
+    assert specs["layers"]["wo"] == P(None, "model", "data")
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", "data")
+    assert specs["layers"]["ln1"] == P()
+
+
+def test_fsdp_spans_pods_on_multipod(llama_shapes):
+    specs = rules.param_specs(llama_shapes, MULTI)
+    assert specs["layers"]["wq"] == P(None, ("pod", "data"), "model")
+    assert specs["embed"] == P("model", ("pod", "data"))
+
+
+def test_indivisible_vocab_replicated():
+    cfg = get_config("granite-3-2b")        # vocab 49155: not /16
+    bundle = build(cfg)
+    shapes = jax.eval_shape(bundle.init, KEY)
+    specs = rules.param_specs(shapes, SINGLE)
+    assert specs["embed"] == P(None, "data")   # vocab dim dropped
+
+
+def test_moe_expert_parallel():
+    cfg = get_config("dbrx-132b")
+    bundle = build(cfg)
+    shapes = jax.eval_shape(bundle.init, KEY)
+    specs = rules.param_specs(shapes, SINGLE)
+    assert specs["layers"]["moe"]["w_up"] == P(None, "model", "data", None)
+    assert specs["layers"]["moe"]["w_down"] == P(None, "model", None,
+                                                 "data")
+
+
+def test_batch_axis_divisibility():
+    assert rules.batch_axis(SINGLE, 256) == ("data",)
+    assert rules.batch_axis(MULTI, 256) == ("pod", "data")
+    assert rules.batch_axis(MULTI, 1) is None       # long_500k: replicate
+    assert rules.batch_axis(MULTI, 17) is None
+
+
+def test_cache_specs_kv_fallback():
+    cfg = get_config("tinyllama-1.1b")      # kv=4: not /16 → shard hd=64
+    bundle = build(cfg)
+    cache = jax.eval_shape(lambda: bundle.init_cache(128, 64, jnp.bfloat16))
+    specs = rules.cache_specs(cfg, 128, SINGLE, cache)
+    assert specs["k"] == P(None, "data", None, None, "model")
+
+
+def test_drop_indivisible():
+    s = rules.drop_indivisible(P("model", "data"), (49155, 2048), SINGLE)
+    assert s == P(None, "data")
+    s2 = rules.drop_indivisible(P(("pod", "data"), None), (64, 8), MULTI)
+    assert s2 == P(("pod", "data"), None)
+
+
+def test_distributed_train_step_runs(dist):
+    """Real 8-device mesh: sharded params, 2 train steps, loss finite."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                     axis_types=(AxisType.Auto,)*3)
+from repro.configs.base import get_config
+from repro.models.model_zoo import build
+from repro.sharding import ctx, rules
+from repro.train.train_step import make_train_step, init_opt_state
+from repro.optim.adamw import AdamWConfig
+cfg = get_config("tinyllama-1.1b").reduced()
+bundle = build(cfg)
+with ctx.use(mesh, ("pod","data")):
+    params = bundle.init(jax.random.PRNGKey(0))
+    params = jax.device_put(params, rules.param_shardings(params, mesh))
+    opt = init_opt_state(params)
+    opt = jax.device_put(opt, rules.param_shardings(opt, mesh))
+    step = make_train_step(bundle, AdamWConfig(warmup_steps=0), mesh,
+                           microbatches=2, donate=False)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)), jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+    l0 = None
+    for i in range(3):
+        params, opt, met = step(params, opt, batch)
+        if l0 is None: l0 = float(met["loss"])
+    l1 = float(met["loss"])
+    assert np.isfinite(l1)
+    assert l1 < l0, (l0, l1)     # memorizing one batch must reduce loss
+print("OK", l0, "->", l1)
+"""
+    assert "OK" in dist(script)
+
+
+def test_grad_compression_train_step_runs(dist):
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+mesh = jax.make_mesh((2,), ("data",), axis_types=(AxisType.Auto,))
+from repro.configs.base import get_config
+from repro.models.model_zoo import build
+from repro.sharding import ctx
+from repro.train.train_step import make_train_step, init_opt_state
+from repro.optim.adamw import AdamWConfig
+cfg = get_config("tinyllama-1.1b").reduced()
+bundle = build(cfg)
+with ctx.use(mesh, ("data",)):
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params, compress=True)
+    step = make_train_step(bundle, AdamWConfig(warmup_steps=0), mesh,
+                           compress=True, donate=False)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+    losses = []
+    for i in range(4):
+        params, opt, met = step(params, opt, batch)
+        losses.append(float(met["loss"]))
+    assert losses[-1] < losses[0]
+print("OK", losses[0], "->", losses[-1])
+"""
+    assert "OK" in dist(script, n_devices=2)
