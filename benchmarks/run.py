@@ -33,14 +33,12 @@ def _timeit(fn, *args, warmup=2, iters=5):
 def bench_table1(rows):
     """Paper Table 1 — capabilities, as executable probes."""
     import jax.numpy as jnp
-    from repro.core import (ProcGrid, SphereDomain, Domain, DistTensor,
-                            fftb, make_planewave_pair)
+    from repro.core import (ProcGrid, SphereDomain, Domain, fftb,
+                            make_planewave_pair)
     g1 = ProcGrid.create([1])
     t0 = time.perf_counter()
     dom = Domain((0, 0, 0), (15, 15, 15))
-    ti = DistTensor.create(dom, "x{0} y z", g1)
-    to = DistTensor.create(dom, "X Y Z{0}", g1)
-    fx = fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g1)
+    fx = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
     fx(jnp.ones((16, 16, 16), jnp.complex64))
     rows.append(("table1_ctoc_cuboid", (time.perf_counter() - t0) * 1e6, 1))
     t0 = time.perf_counter()
@@ -52,6 +50,27 @@ def bench_table1(rows):
     for nd in (1, 2, 3):
         g = ProcGrid.create_abstract([1] * nd)
         rows.append((f"table1_grid_{nd}d", 0.0, g.ndim))
+
+
+def bench_plan_cache(rows):
+    """Plan build cost vs cached lookup — the serving-path win."""
+    from repro.core import Domain, ProcGrid, fftb, PlanCache
+    g = ProcGrid.create_abstract([8])
+    dom = Domain((0, 0, 0), (63, 63, 63))
+    cache = PlanCache()
+    spec = "b x{0} y z -> b X Y Z{0}"
+    b = Domain((0,), (255,))
+    t0 = time.perf_counter()
+    fftb.plan_for(spec, domains=(b, dom), grid=g, cache=cache)
+    build_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    iters = 100
+    for _ in range(iters):
+        fftb.plan_for(spec, domains=(b, dom), grid=g, cache=cache)
+    hit_us = (time.perf_counter() - t0) * 1e6 / iters
+    rows.append(("plan_build_cold", build_us, 1))
+    rows.append(("plan_cache_hit", hit_us,
+                 round(build_us / max(hit_us, 1e-3), 1)))   # speedup ×
 
 
 def bench_local_fft(rows, quick=False):
@@ -228,6 +247,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     rows: list[tuple[str, float, object]] = []
     bench_table1(rows)
+    bench_plan_cache(rows)
     bench_local_fft(rows, args.quick)
     bench_planewave(rows, args.quick)
     bench_fig9(rows)

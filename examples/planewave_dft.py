@@ -9,6 +9,11 @@ sphere→real-space (apply V) →sphere, exactly the red-line workload of
 Fig. 9. Bands are kept orthonormal with a Gram-Schmidt (QR) step — the
 matrix-matrix form that batching enables.
 
+The forward transform is *derived* from the inverse plan (one schedule
+search per pair), and the execution policy is declarative: pass
+``--policy lazy_bf16`` to pin an executor, or ``--policy tune`` to let
+``plan.tune()`` race the candidates and pin the fastest.
+
 Run:  PYTHONPATH=src python examples/planewave_dft.py [--n 32] [--bands 8]
       (XLA_FLAGS=--xla_force_host_platform_device_count=8 to distribute)
 """
@@ -20,7 +25,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ProcGrid, SphereDomain, make_planewave_pair
+from repro.core import (ExecPolicy, ProcGrid, SphereDomain,
+                        make_planewave_pair)
 
 
 def build_hamiltonian(n, sph, inv, fwd):
@@ -56,15 +62,25 @@ def main(argv=None):
     ap.add_argument("--bands", type=int, default=8)
     ap.add_argument("--iters", type=int, default=40)
     ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--policy", default="eager",
+                    choices=["eager", "lazy", "lazy_bf16", "tune"])
     args = ap.parse_args(argv)
 
     nproc = len(jax.devices())
     g = ProcGrid.create([nproc])
     sph = SphereDomain.from_diameter(args.n // 2)
-    inv, fwd = make_planewave_pair(g, args.n, sph, args.bands)
+    policy = None if args.policy == "tune" \
+        else ExecPolicy.from_mode(args.policy)
+    inv, fwd = make_planewave_pair(g, args.n, sph, args.bands,
+                                   policy=policy)
     print(f"grid={g}  sphere d={sph.extents[0]} "
           f"({sph.npacked} coeffs = {sph.npacked/args.n**3:.1%} of cube)")
     print(inv.describe())
+    if args.policy == "tune":
+        d = sph.extents[0]
+        probe = jnp.ones((args.bands, d, d, d), jnp.complex64)
+        fwd.policy = inv.tune(probe)      # pair shares the winning policy
+        print("tuned:", inv.policy)
 
     h_apply, kin = build_hamiltonian(args.n, sph, inv, fwd)
     precond = 1.0 / (1.0 + jnp.asarray(kin))      # kinetic preconditioner

@@ -1,12 +1,18 @@
-"""Quickstart — the paper's Fig. 6 walkthrough in FFTB-JAX.
+"""Quickstart — the paper's Fig. 6 walkthrough on the builder API.
 
-Creates a processing grid, declares distributed input/output tensors with
-dims-strings, builds a 3D FFT plan, and runs it. Mirrors the C++ snippet:
+Creates a processing grid, declares the transform with one arrow-spec
+string (input dims → output dims; renamed dims are transformed, annotated
+dims are distributed), builds the plan, and runs it::
 
-    grid g = grid(procs, MPI_COMM_WORLD);
-    tensor ti = tensor(dom_in,  "x{0} y z", g);
-    tensor to = tensor(dom_out, "X Y Z{0}", g);
-    fftb  fx = fftb(sizes, to, "X Y Z", ti, "x y z", g);
+    g    = ProcGrid.create([nproc])
+    fx   = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g)
+    y    = fx(x)
+    x2   = fx.inverse()(y)            # derived mirror — no second planning
+
+One-shot calls can skip plan handling entirely — ``fftb.apply`` memoizes
+plans in a process-global LRU cache::
+
+    y = fftb.apply("x{0} y z -> X Y Z{0}", x, domains=dom, grid=g)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
       (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the
@@ -17,7 +23,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import Domain, DistTensor, ProcGrid, fftb
+from repro.core import Domain, ProcGrid, fftb, global_plan_cache
 
 
 def main():
@@ -26,18 +32,15 @@ def main():
     g = ProcGrid.create([nproc])
     print(f"grid: {g}")
 
-    # 2. input/output tensors: 64³ cube, x-distributed in, z-distributed out
+    # 2. declare the transform: 64³ cube, x-distributed in, z-distributed
+    #    out — the planner derives the schedule from the spec alone
     n = 64
     dom = Domain((0, 0, 0), (n - 1, n - 1, n - 1))
-    ti = DistTensor.create(dom, "x{0} y z", g)
-    to = DistTensor.create(dom, "X Y Z{0}", g)
-
-    # 3. create the transform — the planner picks the schedule
-    fx = fftb((n, n, n), to, "X Y Z", ti, "x y z", g)
+    fx = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g)
     print(fx.describe())
     print("comm per device:", fx.comm_stats())
 
-    # 4. execute and validate
+    # 3. execute and validate
     rng = np.random.default_rng(0)
     x = (rng.standard_normal((n, n, n))
          + 1j * rng.standard_normal((n, n, n))).astype(np.complex64)
@@ -46,6 +49,19 @@ def main():
     err = np.abs(y - ref).max() / np.abs(ref).max()
     print(f"max rel err vs numpy.fft: {err:.2e}")
     assert err < 1e-5
+
+    # 4. the inverse is derived from the same stage list (no re-planning)
+    x2 = np.asarray(fx.inverse()(jnp.asarray(y)))
+    rt = np.abs(x2 - x).max()
+    print(f"inverse()(fx(x)) roundtrip err: {rt:.2e}")
+    assert rt < 1e-4
+
+    # 5. one-shot cached form: same plan object on every repeat call
+    y2 = fftb.apply("x{0} y z -> X Y Z{0}", jnp.asarray(x), domains=dom,
+                    grid=g)
+    np.testing.assert_allclose(np.asarray(y2), y, rtol=0, atol=0)
+    fftb.apply("x{0} y z -> X Y Z{0}", jnp.asarray(x), domains=dom, grid=g)
+    print("plan cache:", global_plan_cache().stats)
 
 
 if __name__ == "__main__":

@@ -1,17 +1,22 @@
 """FFTB core — flexible distributed multi-dimensional FFTs (the paper's
 contribution), plus the plane-wave sphere transform and spectral model ops."""
 
+from .cache import PlanCache, global_plan_cache
 from .domain import Domain, SphereDomain, sphere_for_cutoff
-from .dtensor import DistTensor, parse_dims
-from .fft import fftb
+from .dtensor import (DistTensor, dims_string, parse_dims,
+                      parse_transform_spec)
+from .fft import Transform, fftb
 from .grid import ProcGrid
 from .local_fft import dft_matrix, local_dft
-from .plan import FftPlan
+from .plan import FftPlan, Plan
 from .planewave import PlaneWaveFFT, make_planewave_pair
+from .policy import ExecPolicy
 from .spectral import fft_conv, fourier_mixer
 
 __all__ = [
     "Domain", "SphereDomain", "sphere_for_cutoff", "DistTensor",
-    "parse_dims", "fftb", "ProcGrid", "dft_matrix", "local_dft", "FftPlan",
-    "PlaneWaveFFT", "make_planewave_pair", "fft_conv", "fourier_mixer",
+    "parse_dims", "parse_transform_spec", "dims_string", "Transform",
+    "fftb", "ProcGrid", "dft_matrix", "local_dft", "Plan", "FftPlan",
+    "PlaneWaveFFT", "make_planewave_pair", "ExecPolicy", "PlanCache",
+    "global_plan_cache", "fft_conv", "fourier_mixer",
 ]

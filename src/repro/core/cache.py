@@ -1,0 +1,114 @@
+"""Process-global LRU plan cache.
+
+Schedule search + index-table construction make plan building the expensive
+step of every FFTB transform, and model/serving code tends to request the
+same handful of transforms over and over (every SCF iteration, every decode
+step).  ``PlanCache`` memoizes built plans behind a hashable key of
+(spec, domains, grid, policy, ...) — ``fftb.apply``/``fftb.plan_for`` route
+through the process-global instance so callers never rebuild a plan for a
+transform they have already used.
+
+Thread-safe; eviction is LRU.  Builders run outside the lock (they can take
+seconds), so two threads racing on the same cold key may both build — the
+cache stays consistent, one of the two plans wins.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+from .domain import Domain, SphereDomain
+from .grid import ProcGrid
+
+
+class PlanCache:
+    """An LRU mapping from plan keys to built Plan objects."""
+
+    def __init__(self, maxsize: int = 128):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = maxsize
+        self._data: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def get_or_build(self, key, builder):
+        """Return the cached plan for ``key``, building it on a miss."""
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+        plan = builder()
+        with self._lock:
+            self.misses += 1
+            self._data[key] = plan
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+        return plan
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = self.misses = self.evictions = 0
+
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            return {"size": len(self._data), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        s = self.stats
+        return (f"PlanCache(size={s['size']}/{s['maxsize']}, "
+                f"hits={s['hits']}, misses={s['misses']})")
+
+
+_GLOBAL = PlanCache()
+
+
+def global_plan_cache() -> PlanCache:
+    return _GLOBAL
+
+
+# ------------------------------------------------------------------ keying
+def domain_key(dom: Domain) -> tuple:
+    """Hashable identity of a domain.
+
+    SphereDomain's dataclass fields are only the bounding corners, so two
+    spheres with equal bounding boxes but different radii would collide —
+    include the sphere parameters explicitly.
+    """
+    if isinstance(dom, SphereDomain):
+        return ("sphere", dom.lower, dom.upper, dom.radius, dom.center)
+    return ("cuboid", dom.lower, dom.upper)
+
+
+def domains_key(domains) -> tuple:
+    if domains is None:
+        return ()
+    if isinstance(domains, Domain):
+        domains = (domains,)
+    return tuple(domain_key(d) for d in domains)
+
+
+def grid_key(grid: ProcGrid) -> tuple:
+    try:
+        hash(grid.mesh)
+        mesh_id = grid.mesh
+    except TypeError:  # pragma: no cover - unhashable mesh implementations
+        mesh_id = id(grid.mesh)
+    return (mesh_id, grid.axes)

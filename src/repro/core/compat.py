@@ -1,0 +1,71 @@
+"""JAX version compatibility shims.
+
+The repo targets the mesh/shard_map APIs of recent JAX, but must also run on
+older releases (e.g. 0.4.3x) where
+
+  * ``jax.sharding.AxisType`` does not exist (meshes have no axis types —
+    every axis behaves like the later ``AxisType.Auto``),
+  * ``jax.make_mesh`` / ``Mesh`` take no ``axis_types`` keyword,
+  * ``jax.sharding.AbstractMesh`` is constructed from ``((name, size), ...)``
+    pairs instead of ``(shape, names)``,
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells its
+    replication check ``check_rep`` rather than ``check_vma``.
+
+Everything that touches those APIs goes through this module so the rest of
+the codebase can be written against one surface.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+try:  # newer JAX
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - exercised on old JAX only
+    AxisType = None
+
+HAS_AXIS_TYPES = AxisType is not None
+
+
+def _auto_axis_types(n: int):
+    return (AxisType.Auto,) * n if HAS_AXIS_TYPES else None
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    shape, names = tuple(shape), tuple(names)
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(shape, names,
+                             axis_types=_auto_axis_types(len(shape)))
+    return jax.make_mesh(shape, names)
+
+
+def mesh_from_devices(dev_array, names: Sequence[str]) -> Mesh:
+    """``Mesh(devices, names)`` with Auto axis types where supported."""
+    names = tuple(names)
+    if HAS_AXIS_TYPES:
+        return Mesh(dev_array, names,
+                    axis_types=_auto_axis_types(len(names)))
+    return Mesh(dev_array, names)
+
+
+def abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """Device-less mesh for plan construction/inspection."""
+    from jax.sharding import AbstractMesh
+    shape, names = tuple(shape), tuple(names)
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:  # old signature: tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+def shard_map(body, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check off, any JAX version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

@@ -28,6 +28,10 @@ _TOKEN = re.compile(r"^([A-Za-z_][A-Za-z_0-9]*)(?:\{(\d+(?:,\d+)*)\})?$")
 
 def parse_dims(spec: str) -> tuple[tuple[str, ...], dict[str, tuple[int, ...]]]:
     """Parse a dims-string → (dim names, {dim: grid-axis indices})."""
+    if "->" in spec:
+        raise ValueError(
+            f"{spec!r} is an arrow spec — one side expected here "
+            "(use parse_transform_spec / Transform.parse for 'in -> out')")
     names: list[str] = []
     dist: dict[str, tuple[int, ...]] = {}
     for tok in spec.split():
@@ -41,6 +45,43 @@ def parse_dims(spec: str) -> tuple[tuple[str, ...], dict[str, tuple[int, ...]]]:
         if axes:
             dist[name] = tuple(int(a) for a in axes.split(","))
     return tuple(names), dist
+
+
+def dims_string(names, dist) -> str:
+    """Inverse of ``parse_dims``: render (names, {dim: axes}) as a spec."""
+    toks = []
+    for nm in names:
+        axes = dist.get(nm, ())
+        toks.append(nm + ("{%s}" % ",".join(map(str, axes)) if axes else ""))
+    return " ".join(toks)
+
+
+def parse_transform_spec(spec: str):
+    """Parse an arrow spec ``"b x{0} y z -> b X Y Z{0}"``.
+
+    Returns ``((in_names, in_dist), (out_names, out_dist))``.  Dims pair up
+    positionally; a dim whose name is identical on both sides is a *batch*
+    dim, a renamed dim is *transformed* (the paper's lower→upper convention,
+    though any renaming counts).
+    """
+    parts = spec.split("->")
+    if len(parts) != 2:
+        raise ValueError(
+            f"transform spec must contain exactly one '->': {spec!r}")
+    lhs, rhs = parts
+    if not lhs.strip() or not rhs.strip():
+        raise ValueError(f"empty side in transform spec {spec!r}")
+    in_names, in_dist = parse_dims(lhs)
+    out_names, out_dist = parse_dims(rhs)
+    if len(in_names) != len(out_names):
+        raise ValueError(
+            f"rank mismatch in {spec!r}: {len(in_names)} input dims vs "
+            f"{len(out_names)} output dims")
+    if not any(i != o for i, o in zip(in_names, out_names)):
+        raise ValueError(
+            f"no transformed dims in {spec!r}: rename at least one dim "
+            "(e.g. 'x -> X') to mark it transformed")
+    return (in_names, in_dist), (out_names, out_dist)
 
 
 @dataclasses.dataclass(frozen=True)

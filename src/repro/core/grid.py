@@ -15,15 +15,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
-
-def _make_mesh(shape: Sequence[int], names: Sequence[str]) -> Mesh:
-    return jax.make_mesh(
-        tuple(shape), tuple(names),
-        axis_types=(AxisType.Auto,) * len(shape),
-    )
+from .compat import abstract_mesh, make_mesh as _make_mesh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,8 +45,7 @@ class ProcGrid:
         does) — execution requires a real grid."""
         names = tuple(axis_names) if axis_names else tuple(
             f"g{i}" for i in range(len(procs)))
-        amesh = jax.sharding.AbstractMesh(tuple(procs), names)
-        return ProcGrid(amesh, names)
+        return ProcGrid(abstract_mesh(tuple(procs), names), names)
 
     @staticmethod
     def from_mesh(mesh: Mesh, axes: Sequence[str]) -> "ProcGrid":

@@ -13,21 +13,29 @@ on a 2D grid) and volumetric (3D grid) schedules from the declared
 distributions alone.  The executed function is one ``shard_map`` over the
 grid's mesh axes; XLA fuses pack/rotate layout changes into the collectives
 (the paper's hand-written CUDA codelets).
+
+``Plan`` is the common base of ``FftPlan`` and ``PlaneWaveFFT``: execution
+policy resolution, tuning, and the flop/comm accounting shared by both.
+Every plan can *derive* its mirror transforms — ``plan.inverse()`` and
+``plan.adjoint()`` reverse the stage list (each stage knows its own mirror)
+instead of running a second schedule search.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import math
+import time
 from functools import cached_property
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from . import compat
 from . import layout as L
 from .dtensor import DistTensor
 from .local_fft import dft_flops, local_dft
+from .policy import TUNE_CANDIDATES, ExecPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +50,22 @@ class FFTStage:
     def apply(self, x):
         return local_dft(x, self.index, self.n_out, inverse=self.inverse,
                          backend=self.backend)
+
+    def mirrored(self) -> "FFTStage":
+        """The stage of the derived inverse/adjoint plan.
+
+        A square stage mirrors to its exact inverse (DFT_n ↔ iDFT_n).  A
+        rectangular pad-fused stage (d→n) mirrors to the truncating stage
+        (n→d) — the identity holds on the retained subspace, which is
+        exactly the plane-wave sphere contract.
+        """
+        return FFTStage(self.dim, self.index, self.n_out, self.n_in,
+                        not self.inverse, self.backend)
+
+    @property
+    def transform_size(self) -> int:
+        """The full DFT length N the (possibly sliced) matrix comes from."""
+        return max(self.n_in, self.n_out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,18 +82,158 @@ class MoveStage:
             x, self.axis_name, split_axis=self.dst_index,
             concat_axis=self.src_index, tiled=True)
 
+    def mirrored(self) -> "MoveStage":
+        """The opposite distributed transpose (all_to_all is a permutation,
+        so the mirror is both its inverse and its adjoint)."""
+        return MoveStage(self.axis_name, self.axis_size, self.dst, self.src,
+                         self.dst_index, self.src_index)
 
-class FftPlan:
+
+class Plan:
+    """Common protocol + shared accounting of FFTB plans.
+
+    Concrete plans provide ``tin``/``tout``/``grid``/``dims``/``stages`` and
+    ``_execute``; the base supplies policy resolution, ``tune()``, and the
+    stage-walking flop/comm accounting.
+    """
+
+    tin: DistTensor
+    tout: DistTensor
+    policy: ExecPolicy
+
+    # ----------------------------------------------------------- execution
+    def __call__(self, x, *, mode: str | None = None,
+                 policy: ExecPolicy | None = None):
+        pol = self.resolve_policy(mode=mode, policy=policy)
+        if pol.check_shapes and tuple(x.shape) != self.tin.shape:
+            raise ValueError(f"input shape {x.shape} != {self.tin.shape}")
+        return self._execute(x, pol)
+
+    def resolve_policy(self, *, mode: str | None = None,
+                       policy: ExecPolicy | None = None) -> ExecPolicy:
+        if policy is not None and mode is not None:
+            raise ValueError("pass either mode= (legacy) or policy=, "
+                             "not both")
+        if policy is not None:
+            return policy
+        if mode is not None:
+            return ExecPolicy.from_mode(
+                mode, check_shapes=self.policy.check_shapes)
+        return self.policy
+
+    def _execute(self, x, pol: ExecPolicy):
+        raise NotImplementedError
+
+    def tune(self, x, *, candidates=TUNE_CANDIDATES, warmup: int = 1,
+             iters: int = 3) -> ExecPolicy:
+        """Benchmark candidate policies on ``x`` and pin the fastest.
+
+        Returns the winning policy (also set as the plan's default, so
+        subsequent plain ``plan(x)`` calls use it).
+        """
+        best, best_t = None, None
+        for pol in candidates:
+            pol = dataclasses.replace(
+                pol, check_shapes=self.policy.check_shapes)
+            for _ in range(warmup):
+                jax.block_until_ready(self(x, policy=pol))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(self(x, policy=pol))
+            dt = (time.perf_counter() - t0) / iters
+            if best_t is None or dt < best_t:
+                best, best_t = pol, dt
+        self.policy = best
+        return best
+
+    # ------------------------------------------------------------- mirrors
+    def inverse(self) -> "Plan":
+        """The mirror transform tout→tin, derived by reversing stages (no
+        second schedule search).  Exact inverse for square transforms; for
+        rectangular (pad/truncate) stages it is the mirror on the retained
+        subspace."""
+        raise NotImplementedError
+
+    def adjoint(self) -> "Plan":
+        """The conjugate-transpose operator tout→tin, same derived stage
+        list as ``inverse()`` with the DFT normalization factors flipped
+        (adjoint of unnormalized DFT_N is N·iDFT_N)."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- accounting
+    def flop_count(self) -> int:
+        total = 0
+        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                batch = math.prod(sizes[d] for d in self.dims if d != st.dim)
+                total += dft_flops(st.n_out, st.n_in, batch, st.backend)
+                sizes[st.dim] = st.n_out
+        return total
+
+    def comm_stats(self, itemsize: int = 8) -> list[dict]:
+        """Per-MoveStage communication volume (bytes sent per device)."""
+        return self._comm_stats_for(self.stages, itemsize)
+
+    def _comm_stats_for(self, stages, itemsize: int = 8) -> list[dict]:
+        out = []
+        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
+        lay = L.normalize(self.tin.layout)
+        grid_shape = self.grid.shape
+        for st in stages:
+            if isinstance(st, FFTStage):
+                sizes[st.dim] = st.n_out
+                continue
+            local_elems = math.prod(
+                L.local_size(d, sizes[d], lay, grid_shape)
+                for d in self.dims)
+            p = st.axis_size
+            out.append({
+                "axis": st.axis_name, "procs": p,
+                "bytes_per_device": local_elems * itemsize * (p - 1) // p,
+                "move": f"{st.src}->{st.dst}",
+            })
+            # replay the move on the tracking layout
+            ax = [a for a in range(len(grid_shape))
+                  if self.grid.axis_name(a) == st.axis_name][0]
+            lay = L.apply_move(lay, L.Move(ax, st.src, st.dst))
+        return out
+
+    def describe(self) -> str:
+        lines = [f"{type(self).__name__} over {self.grid}: "
+                 f"{self.tin.dims} {self.tin.layout} -> "
+                 f"{self.tout.dims} {self.tout.layout}"]
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                kind = "iDFT" if st.inverse else "DFT"
+                lines.append(f"  {kind}[{st.dim}] {st.n_in}->{st.n_out} "
+                             f"({st.backend})")
+            else:
+                lines.append(f"  a2a[{st.axis_name}] {st.src}->{st.dst}")
+        scale = getattr(self, "scale", 1.0)
+        if scale != 1.0:
+            lines.append(f"  scale ×{scale:g}")
+        return "\n".join(lines)
+
+
+class FftPlan(Plan):
     """A compiled-able distributed multi-dimensional (batched) FFT."""
+
+    #: process-wide count of schedule searches — lets tests (and the plan
+    #: cache) assert that derived/cached plans never re-plan.
+    searches = 0
 
     def __init__(self, tin: DistTensor, tout: DistTensor,
                  fft_dims: list[tuple[str, str]], *, inverse: bool = False,
-                 backend: str = "matmul"):
+                 backend: str = "matmul", policy: ExecPolicy | None = None,
+                 _stages: list | None = None, _scale: float = 1.0):
         if tin.grid.mesh is not tout.grid.mesh:
             raise ValueError("input and output tensors live on different "
                              "meshes")
         self.tin, self.tout, self.grid = tin, tout, tin.grid
-        self.inverse, self.backend = inverse, backend
+        self.is_inverse, self.backend = inverse, backend
+        self.policy = policy if policy is not None else ExecPolicy()
+        self.scale = _scale
         self.dims = tin.dims
         self.fft_pairs = list(fft_dims)
 
@@ -87,7 +251,10 @@ class FftPlan:
 
         self._final_layout = L.normalize(
             {o2i[d]: ax for d, ax in tout.layout.items()})
-        self._search()
+        if _stages is not None:
+            self.stages = list(_stages)     # derived plan: no search
+        else:
+            self._search()
 
     # ------------------------------------------------------------ planning
     def _search(self) -> None:
@@ -101,6 +268,7 @@ class FftPlan:
         "framework decides on the most suited implementation" behaviour
         of the paper's intermediate block.
         """
+        FftPlan.searches += 1
         fft_in = [i for i, _ in self.fft_pairs]
         best = None
         for perm in itertools.permutations(fft_in):
@@ -166,7 +334,7 @@ class FftPlan:
                 emit_move(axis, d, dst)
                 lay = L.apply_move(lay, L.Move(axis, d, dst))
             stages.append(FFTStage(d, idx[d], sizes[d], pair_out[d],
-                                   self.inverse, self.backend))
+                                   self.is_inverse, self.backend))
             sizes[d] = pair_out[d]
             done.add(d)
 
@@ -176,10 +344,44 @@ class FftPlan:
             lay = L.apply_move(lay, mv)
         return stages
 
+    # ------------------------------------------------------------- mirrors
+    def _mirror(self, scale: float) -> "FftPlan":
+        # stage dim names live in the input-side namespace; the mirrored
+        # plan's input is our output, so rename positionally (x → X) or
+        # the mirror's accounting would key sizes/layouts by unknown dims
+        ren = dict(zip(self.tin.dims, self.tout.dims))
+        stages = []
+        for st in reversed(self.stages):
+            m = st.mirrored()
+            if isinstance(m, FFTStage):
+                m = dataclasses.replace(m, dim=ren[m.dim])
+            else:
+                m = dataclasses.replace(m, src=ren[m.src], dst=ren[m.dst])
+            stages.append(m)
+        pairs = [(o, i) for i, o in self.fft_pairs]
+        return FftPlan(self.tout, self.tin, pairs,
+                       inverse=not self.is_inverse, backend=self.backend,
+                       policy=self.policy, _stages=stages, _scale=scale)
+
+    def inverse(self) -> "FftPlan":
+        return self._mirror(1.0 / self.scale if self.scale != 1.0 else 1.0)
+
+    def adjoint(self) -> "FftPlan":
+        # adjoint of sliced DFT_N is N · sliced iDFT_N (and vice versa):
+        # the mirrored stage list times the product of flipped norms.
+        scale = self.scale
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                scale *= (1.0 / st.transform_size if st.inverse
+                          else float(st.transform_size))
+        return self._mirror(scale)
+
     # ----------------------------------------------------------- execution
     def _raw_apply(self, x):
         for st in self.stages:
             x = st.apply(x)
+        if self.scale != 1.0:
+            x = x * jnp.asarray(self.scale, x.dtype)
         return x
 
     def _raw_apply_lazy(self, x, compute_dtype=jnp.float32):
@@ -231,23 +433,22 @@ class FftPlan:
         out_axes = [perm.index(i) for i in range(len(perm))]
         xr = jnp.transpose(xr, out_axes)
         xi = jnp.transpose(xi, out_axes)
+        if self.scale != 1.0:
+            s = jnp.asarray(self.scale, jnp.float32)
+            xr, xi = xr.astype(jnp.float32) * s, xi.astype(jnp.float32) * s
         return jax.lax.complex(xr.astype(jnp.float32),
                                xi.astype(jnp.float32))
 
-    def _sharded(self, mode: str):
+    def _sharded(self, pol: ExecPolicy):
         mesh = self.grid.mesh
-        if mode == "eager":
+        if pol.mode == "eager":
             body = self._raw_apply
-        elif mode == "lazy":
-            body = self._raw_apply_lazy
-        elif mode == "lazy_bf16":
-            def body(x):
-                return self._raw_apply_lazy(x, compute_dtype=jnp.bfloat16)
         else:
-            raise ValueError(mode)
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=self.tin.pspec, out_specs=self.tout.pspec,
-                           check_vma=False)
+            dtype = pol.jax_compute_dtype()
+
+            def body(x):
+                return self._raw_apply_lazy(x, compute_dtype=dtype)
+        fn = compat.shard_map(body, mesh, self.tin.pspec, self.tout.pspec)
         return jax.jit(fn)
 
     @cached_property
@@ -256,62 +457,14 @@ class FftPlan:
 
     @property
     def _sharded_fn(self):
-        return self._fn_cache.setdefault("eager", self._sharded("eager"))
+        return self._fn_for(ExecPolicy())
 
-    def __call__(self, x, *, mode: str = "eager"):
-        if x.shape != self.tin.shape:
-            raise ValueError(f"input shape {x.shape} != {self.tin.shape}")
-        fn = self._fn_cache.setdefault(mode, self._sharded(mode))
-        return fn(x)
+    def _fn_for(self, pol: ExecPolicy):
+        key = (pol.mode, pol.compute_dtype)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            fn = self._fn_cache[key] = self._sharded(pol)
+        return fn
 
-    # ---------------------------------------------------------- accounting
-    def flop_count(self) -> int:
-        total = 0
-        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
-        for st in self.stages:
-            if isinstance(st, FFTStage):
-                batch = math.prod(sizes[d] for d in self.dims if d != st.dim)
-                total += dft_flops(st.n_out, st.n_in, batch, st.backend)
-                sizes[st.dim] = st.n_out
-        return total
-
-    def comm_stats(self, itemsize: int = 8) -> list[dict]:
-        """Per-MoveStage communication volume (bytes sent per device)."""
-        return self._comm_stats_for(self.stages, itemsize)
-
-    def _comm_stats_for(self, stages, itemsize: int = 8) -> list[dict]:
-        out = []
-        sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}
-        lay = L.normalize(self.tin.layout)
-        grid_shape = self.grid.shape
-        for st in stages:
-            if isinstance(st, FFTStage):
-                sizes[st.dim] = st.n_out
-                continue
-            local_elems = math.prod(
-                L.local_size(d, sizes[d], lay, grid_shape)
-                for d in self.dims)
-            p = st.axis_size
-            out.append({
-                "axis": st.axis_name, "procs": p,
-                "bytes_per_device": local_elems * itemsize * (p - 1) // p,
-                "move": f"{st.src}->{st.dst}",
-            })
-            # replay the move on the tracking layout
-            ax = [a for a in range(len(grid_shape))
-                  if self.grid.axis_name(a) == st.axis_name][0]
-            lay = L.apply_move(lay, L.Move(ax, st.src, st.dst))
-        return out
-
-    def describe(self) -> str:
-        lines = [f"FftPlan over {self.grid}: "
-                 f"{self.tin.dims} {self.tin.layout} -> "
-                 f"{self.tout.dims} {self.tout.layout}"]
-        for st in self.stages:
-            if isinstance(st, FFTStage):
-                kind = "iDFT" if st.inverse else "DFT"
-                lines.append(f"  {kind}[{st.dim}] {st.n_in}->{st.n_out} "
-                             f"({st.backend})")
-            else:
-                lines.append(f"  a2a[{st.axis_name}] {st.src}->{st.dst}")
-        return "\n".join(lines)
+    def _execute(self, x, pol: ExecPolicy):
+        return self._fn_for(pol)(x)

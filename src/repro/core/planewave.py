@@ -19,52 +19,90 @@ with truncating DFTs):
 
 All of this reuses FftPlan's machinery: the comm-cost schedule search finds
 this order automatically; this class adds the sphere bookkeeping (CSR offset
-arrays → static pack/unpack index tables) and the padded-cube baseline the
-paper compares against.
+arrays → static pack/unpack index tables).  The mirror transform is *derived*
+(``inverse()``/``adjoint()`` reverse the stage list), so a forward/inverse
+pair costs one schedule search, not two.
 """
 from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .domain import Domain, SphereDomain
 from .dtensor import DistTensor
-from .plan import FftPlan
+from .plan import FftPlan, Plan
+from .policy import ExecPolicy
 
 
-class PlaneWaveFFT:
+class PlaneWaveFFT(Plan):
     """Batched distributed sphere ↔ real-space transform."""
 
     def __init__(self, sphere: SphereDomain, n: tuple[int, ...],
                  tin: DistTensor, tout: DistTensor, *, inverse: bool,
-                 backend: str = "matmul"):
+                 backend: str = "matmul",
+                 pairs: list[tuple[str, str]] | None = None,
+                 policy: ExecPolicy | None = None,
+                 plan: FftPlan | None = None):
         self.sphere = sphere
         self.n = tuple(n)
-        self.inverse = inverse
+        self.is_inverse = inverse
+        self.backend = backend
         self.tin, self.tout = tin, tout
         self.grid = tin.grid
-        # transformed dims are the trailing three (batch dims lead)
-        pairs = list(zip(tin.dims[-3:], tout.dims[-3:]))
-        self.plan = FftPlan(tin, tout, pairs, inverse=inverse,
-                            backend=backend)
+        self.policy = policy if policy is not None else ExecPolicy()
+        if pairs is None:
+            # transformed dims default to the trailing three (batch leads)
+            pairs = list(zip(tin.dims[-3:], tout.dims[-3:]))
+        if plan is None:
+            plan = FftPlan(tin, tout, pairs, inverse=inverse,
+                           backend=backend, policy=self.policy)
+        self.plan = plan
         self._pack_idx = jnp.asarray(sphere.pack_indices())
         self._mask = jnp.asarray(sphere.mask())
 
     # ------------------------------------------------------------- factory
     @staticmethod
     def from_tensors(sizes, tout, out_names, tin, in_names, grid, *,
-                     inverse: bool, backend: str = "matmul"):
+                     inverse: bool, backend: str = "matmul",
+                     policy: ExecPolicy | None = None):
         sphere = next(d for d in (tin if inverse else tout).domains
                       if isinstance(d, SphereDomain))
+        pairs = list(zip(in_names, out_names))
         return PlaneWaveFFT(sphere, sizes, tin, tout, inverse=inverse,
-                            backend=backend)
+                            backend=backend, pairs=pairs, policy=policy)
 
     # ------------------------------------------------------------- execute
-    def __call__(self, x, *, mode: str = "eager"):
-        return self.plan(x, mode=mode)
+    # __call__/tune come from Plan; execution delegates to the inner plan
+    def _execute(self, x, pol: ExecPolicy):
+        return self.plan._execute(x, pol)
+
+    @property
+    def stages(self):
+        return self.plan.stages
+
+    @property
+    def dims(self):
+        return self.plan.dims
+
+    @property
+    def fft_pairs(self):
+        return self.plan.fft_pairs
+
+    # ------------------------------------------------------------- mirrors
+    def _mirror(self, plan: FftPlan) -> "PlaneWaveFFT":
+        return PlaneWaveFFT(self.sphere, self.n, self.tout, self.tin,
+                            inverse=not self.is_inverse,
+                            backend=self.backend, pairs=plan.fft_pairs,
+                            policy=self.policy, plan=plan)
+
+    def inverse(self) -> "PlaneWaveFFT":
+        """Derived mirror transform (no second schedule search): the
+        inverse of a staged-pad plan is the staged-truncate plan."""
+        return self._mirror(self.plan.inverse())
+
+    def adjoint(self) -> "PlaneWaveFFT":
+        return self._mirror(self.plan.adjoint())
 
     # ------------------------------------------------- sphere pack/unpack
     def unpack(self, packed):
@@ -85,12 +123,7 @@ class PlaneWaveFFT:
         return cube * self._mask.astype(cube.dtype)
 
     # ---------------------------------------------------------- accounting
-    def flop_count(self) -> int:
-        return self.plan.flop_count()
-
-    def comm_stats(self, itemsize: int = 8):
-        return self.plan.comm_stats(itemsize)
-
+    # flop_count/comm_stats come from Plan via the delegated stage list
     def describe(self) -> str:
         return ("PlaneWaveFFT sphere d=%d -> grid n=%d\n" %
                 (self.sphere.extents[0], self.n[0])) + self.plan.describe()
@@ -99,27 +132,23 @@ class PlaneWaveFFT:
 def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
                         backend: str = "matmul",
                         batch_axes: tuple[int, ...] = (),
-                        fft_axes: tuple[int, ...] | None = None
+                        fft_axes: tuple[int, ...] | None = None,
+                        policy: ExecPolicy | None = None
                         ) -> tuple[PlaneWaveFFT, PlaneWaveFFT]:
     """(inverse, forward) plane-wave transforms sharing one data layout.
 
     inverse: sphere bounding-cube (b, x{F}, y, z) → real cube (b, X, Y, Z{F})
-    forward: real cube (b, x{F'}, …) → sphere bounding-cube, exact adjoint
-    layouts, so `forward(inverse(c))` round-trips without extra movement.
+    forward: the derived mirror (``inv.inverse()``) — exact adjoint layouts,
+    so `forward(inverse(c))` round-trips without extra movement, and the
+    pair costs a single schedule search.
     """
     if fft_axes is None:
         fft_axes = tuple(a for a in range(grid.ndim) if a not in batch_axes)
-    d = sphere.extents[0]
     bdom = Domain((0,), (nb - 1,))
     sph = sphere
     cube = Domain((0, 0, 0), (n - 1, n - 1, n - 1))
 
-    def spec(names, dist):
-        toks = []
-        for nm in names:
-            ax = dist.get(nm, ())
-            toks.append(nm + ("{%s}" % ",".join(map(str, ax)) if ax else ""))
-        return " ".join(toks)
+    from .dtensor import dims_string as spec
 
     bspec = {"b": tuple(batch_axes)} if batch_axes else {}
     in_i = DistTensor.create((bdom, sph), spec(
@@ -127,12 +156,5 @@ def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
     out_i = DistTensor.create((bdom, cube), spec(
         ("b", "X", "Y", "Z"), {**bspec, "Z": tuple(fft_axes)}), grid)
     inv = PlaneWaveFFT(sph, (n, n, n), in_i, out_i, inverse=True,
-                       backend=backend)
-
-    in_f = DistTensor.create((bdom, cube), spec(
-        ("b", "x", "y", "z"), {**bspec, "z": tuple(fft_axes)}), grid)
-    out_f = DistTensor.create((bdom, sph), spec(
-        ("b", "X", "Y", "Z"), {**bspec, "X": tuple(fft_axes)}), grid)
-    fwd = PlaneWaveFFT(sph, (n, n, n), in_f, out_f, inverse=False,
-                       backend=backend)
-    return inv, fwd
+                       backend=backend, policy=policy)
+    return inv, inv.inverse()

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .local_fft import local_dft
+from .policy import ExecPolicy
 
 
 def _next_pow2(n: int) -> int:
@@ -25,7 +26,17 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-def fft_conv(x, kernel, axis: int = 1, backend: str = "jnp"):
+def _pre_cast(x, policy: ExecPolicy | None):
+    """Apply the policy's compute dtype to a *real* input before the
+    complex promotion (bf16 operands, f32 accumulation — same contract as
+    the plans' lazy_bf16 executor)."""
+    if policy is not None and policy.compute_dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def fft_conv(x, kernel, axis: int = 1, backend: str = "jnp",
+             policy: ExecPolicy | None = None):
     """Causal depthwise convolution via frequency domain.
 
     x: (..., S, ...) real; kernel: (K, C) or (K,) with K ≤ S; convolves along
@@ -35,6 +46,17 @@ def fft_conv(x, kernel, axis: int = 1, backend: str = "jnp"):
     """
     S = x.shape[axis]
     K = kernel.shape[0]
+    if policy is not None and policy.check_shapes:
+        if kernel.ndim not in (1, 2):
+            raise ValueError(f"kernel must be (K,) or (K, C), "
+                             f"got {kernel.shape}")
+        if kernel.ndim == 2 and kernel.shape[1] != x.shape[-1]:
+            raise ValueError(
+                f"kernel channels {kernel.shape[1]} != input channels "
+                f"{x.shape[-1]}")
+    out_dtype = x.dtype
+    x = _pre_cast(x, policy)
+    kernel = _pre_cast(kernel, policy)
     L = _next_pow2(S + K - 1)
     xm = jnp.moveaxis(x, axis, -1)                       # (..., C, S)? keep
     # operate with seq last
@@ -46,12 +68,17 @@ def fft_conv(x, kernel, axis: int = 1, backend: str = "jnp"):
     Kf = local_dft(k.astype(jnp.complex64), -1, L, backend=backend)
     Yf = Xf * Kf
     y = local_dft(Yf, -1, L, inverse=True, backend=backend)
-    y = jnp.real(y[..., :S]).astype(x.dtype)
+    y = jnp.real(y[..., :S]).astype(out_dtype)
     return jnp.moveaxis(y, -1, axis)
 
 
-def fourier_mixer(x, backend: str = "jnp"):
+def fourier_mixer(x, backend: str = "jnp",
+                  policy: ExecPolicy | None = None):
     """FNet token mixing: Re(FFT_seq(FFT_hidden(x))). x: (B, S, D)."""
-    h = local_dft(x.astype(jnp.complex64), -1, backend=backend)
+    if policy is not None and policy.check_shapes and x.ndim != 3:
+        raise ValueError(f"fourier_mixer expects (B, S, D), got {x.shape}")
+    out_dtype = x.dtype
+    h = local_dft(_pre_cast(x, policy).astype(jnp.complex64), -1,
+                  backend=backend)
     s = local_dft(h, -2, backend=backend)
-    return jnp.real(s).astype(x.dtype)
+    return jnp.real(s).astype(out_dtype)

@@ -8,7 +8,8 @@ never touches jax device state.  Single pod: 16×16 = 256 chips
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core.compat import mesh_from_devices
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,8 +27,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "jax import")
     import numpy as np
     dev_array = np.asarray(devices[:ndev]).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes,
-                             axis_types=(AxisType.Auto,) * len(shape))
+    return mesh_from_devices(dev_array, axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
@@ -37,5 +37,4 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     for s in shape:
         ndev *= s
     dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
-    return jax.sharding.Mesh(dev, axes,
-                             axis_types=(AxisType.Auto,) * len(shape))
+    return mesh_from_devices(dev, axes)

@@ -69,8 +69,10 @@ def drop_indivisible(spec: P, shape, mesh: Mesh | None) -> P:
     ent = list(spec) + [None] * (len(shape) - len(spec))
     out = []
     for dim, e in zip(shape, ent):
-        out.append(e if (e is None or dim % _axes_size(e, mesh) == 0)
-                   else None)
+        e = e if (e is None or dim % _axes_size(e, mesh) == 0) else None
+        if isinstance(e, tuple) and len(e) == 1:
+            e = e[0]          # old JAX keeps ("data",) distinct from "data"
+        out.append(e)
     return P(*out)
 
 

@@ -5,8 +5,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Domain, DistTensor, FftPlan, ProcGrid, fftb,
-                        parse_dims)
+from repro.core import Domain, DistTensor, ProcGrid, fftb, parse_dims
 from repro.core.layout import Move, apply_move, plan_redistribution
 from repro.core.plan import FFTStage, MoveStage
 
@@ -57,30 +56,28 @@ def test_plan_redistribution_slab_roundtrip():
 
 
 # ------------------------------------------------------- plan structure
-def _mk_plan(grid_shape, in_spec, out_spec, n=16, nb=4):
+def _mk_plan(grid_shape, spec, n=16, nb=4):
     g = ProcGrid.create_abstract(list(grid_shape))
     b = Domain((0,), (nb - 1,))
     dom = Domain((0, 0, 0), (n - 1, n - 1, n - 1))
-    ti = DistTensor.create((b, dom), in_spec, g)
-    to = DistTensor.create((b, dom), out_spec, g)
-    return fftb((n, n, n), to, "X Y Z", ti, "x y z", g)
+    return fftb(spec, domains=(b, dom), grid=g)
 
 
 def test_slab_pencil_plan_has_one_transpose():
-    plan = _mk_plan((4,), "b x{0} y z", "B X Y Z{0}")
+    plan = _mk_plan((4,), "b x{0} y z -> b X Y Z{0}")
     moves = [s for s in plan.stages if isinstance(s, MoveStage)]
     ffts = [s for s in plan.stages if isinstance(s, FFTStage)]
     assert len(moves) == 1 and len(ffts) == 3
 
 
 def test_pencil_pencil_plan_has_two_transposes():
-    plan = _mk_plan((2, 2), "b x{0} y{1} z", "B X Y{0} Z{1}")
+    plan = _mk_plan((2, 2), "b x{0} y{1} z -> b X Y{0} Z{1}")
     moves = [s for s in plan.stages if isinstance(s, MoveStage)]
     assert len(moves) == 2
 
 
 def test_comm_stats_volume_slab():
-    plan = _mk_plan((4,), "b x{0} y z", "B X Y Z{0}")
+    plan = _mk_plan((4,), "b x{0} y z -> b X Y Z{0}")
     (st,) = plan.comm_stats()
     # local block 4·(16/4)·16·16 complex64 → bytes·(p-1)/p leave the device
     local = 4 * 4 * 16 * 16 * 8
@@ -88,7 +85,7 @@ def test_comm_stats_volume_slab():
 
 
 def test_flop_count_matmul_backend():
-    plan = _mk_plan((1,), "b x{0} y z", "B X Y Z{0}")  # abstract 1-proc
+    plan = _mk_plan((1,), "b x{0} y z -> b X Y Z{0}")  # abstract 1-proc
     # 3 stages × 8·n·n flops per line × n² lines × nb batches
     assert plan.flop_count() == 3 * 8 * 16 * 16 * (16 * 16) * 4
 
@@ -98,9 +95,7 @@ def test_fft_1device_matches_numpy():
     g = ProcGrid.create([1])
     b = Domain((0,), (1,))
     dom = Domain((0, 0, 0), (7, 7, 7))
-    ti = DistTensor.create((b, dom), "b x{0} y z", g)
-    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-    plan = fftb((8, 8, 8), to, "X Y Z", ti, "x y z", g)
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
     rng = np.random.default_rng(0)
     x = (rng.standard_normal((2, 8, 8, 8))
          + 1j * rng.standard_normal((2, 8, 8, 8))).astype(np.complex64)
@@ -113,9 +108,8 @@ def test_inverse_fft_1device():
     g = ProcGrid.create([1])
     b = Domain((0,), (1,))
     dom = Domain((0, 0, 0), (7, 7, 7))
-    ti = DistTensor.create((b, dom), "b x{0} y z", g)
-    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-    plan = fftb((8, 8, 8), to, "X Y Z", ti, "x y z", g, inverse=True)
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g,
+                inverse=True)
     rng = np.random.default_rng(1)
     x = (rng.standard_normal((2, 8, 8, 8))
          + 1j * rng.standard_normal((2, 8, 8, 8))).astype(np.complex64)
@@ -124,16 +118,46 @@ def test_inverse_fft_1device():
     np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-5)
 
 
+# ---------------------------------------------------- legacy positional API
+def test_legacy_positional_fftb_shim():
+    """The paper's C++-style signature keeps working (with a warning)."""
+    g = ProcGrid.create([1])
+    b = Domain((0,), (1,))
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    ti = DistTensor.create((b, dom), "b x{0} y z", g)
+    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
+    with pytest.warns(DeprecationWarning):
+        plan = fftb((8, 8, 8), to, "X Y Z", ti, "x y z", g)
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((2, 8, 8, 8))
+         + 1j * rng.standard_normal((2, 8, 8, 8))).astype(np.complex64)
+    y = np.asarray(plan(jnp.asarray(x)))
+    ref = np.fft.fftn(x, axes=(1, 2, 3))
+    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_legacy_shim_matches_builder_plan():
+    g = ProcGrid.create_abstract([4])
+    b = Domain((0,), (3,))
+    dom = Domain((0, 0, 0), (15, 15, 15))
+    ti = DistTensor.create((b, dom), "b x{0} y z", g)
+    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
+    with pytest.warns(DeprecationWarning):
+        old = fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g)
+    new = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
+    assert [type(s) for s in old.stages] == [type(s) for s in new.stages]
+    assert old.flop_count() == new.flop_count()
+    assert old.comm_stats() == new.comm_stats()
+
+
 # ------------------------------------------------ distributed (subprocess)
 _DIST_TMPL = """
 import numpy as np, jax.numpy as jnp
-from repro.core import ProcGrid, Domain, DistTensor, fftb
+from repro.core import ProcGrid, Domain, fftb
 g = ProcGrid.create({grid})
 n, nb = 16, 4
 b = Domain((0,), (nb-1,)); dom = Domain((0,0,0),(n-1,n-1,n-1))
-ti = DistTensor.create((b, dom), {in_spec!r}, g)
-to = DistTensor.create((b, dom), {out_spec!r}, g)
-fx = fftb((n,n,n), to, "X Y Z", ti, "x y z", g)
+fx = fftb({spec!r}, domains=(b, dom), grid=g)
 rng = np.random.default_rng(0)
 x = (rng.standard_normal((nb,n,n,n)) + 1j*rng.standard_normal((nb,n,n,n))).astype(np.complex64)
 y = np.asarray(fx(jnp.asarray(x)))
@@ -144,15 +168,14 @@ print("OK", err)
 """
 
 
-@pytest.mark.parametrize("grid,in_spec,out_spec", [
-    ([8], "b x{0} y z", "B X Y Z{0}"),                 # slab-pencil, 1D
-    ([4, 2], "b x{0} y{1} z", "B X Y{0} Z{1}"),        # pencil, 2D
-    ([2, 2, 2], "b x{0} y{1} z{2}", "B X{0} Y{1} Z{2}"),  # volumetric, 3D
-    ([4], "b{0} x y z", "B{0} X Y Z"),                 # pure batch parallel
+@pytest.mark.parametrize("grid,spec", [
+    ([8], "b x{0} y z -> b X Y Z{0}"),                    # slab-pencil, 1D
+    ([4, 2], "b x{0} y{1} z -> b X Y{0} Z{1}"),           # pencil, 2D
+    ([2, 2, 2], "b x{0} y{1} z{2} -> b X{0} Y{1} Z{2}"),  # volumetric, 3D
+    ([4], "b{0} x y z -> b{0} X Y Z"),                    # pure batch parallel
 ])
-def test_distributed_fft_grids(dist, grid, in_spec, out_spec):
-    out = dist(_DIST_TMPL.format(grid=grid, in_spec=in_spec,
-                                 out_spec=out_spec))
+def test_distributed_fft_grids(dist, grid, spec):
+    out = dist(_DIST_TMPL.format(grid=grid, spec=spec))
     assert "OK" in out
 
 
@@ -160,16 +183,12 @@ def test_batched_vs_unbatched_same_result(dist):
     # paper Fig. 9: batching changes the schedule, never the numbers
     script = """
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import ProcGrid, Domain, DistTensor, fftb
+from repro.core import ProcGrid, Domain, fftb
 g = ProcGrid.create([8])
 n, nb = 16, 4
 b = Domain((0,), (nb-1,)); dom = Domain((0,0,0),(n-1,n-1,n-1))
-ti = DistTensor.create((b, dom), "b x{0} y z", g)
-to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-fx = fftb((n,n,n), to, "X Y Z", ti, "x y z", g)
-ti1 = DistTensor.create(dom, "x{0} y z", g)
-to1 = DistTensor.create(dom, "X Y Z{0}", g)
-f1 = fftb((n,n,n), to1, "X Y Z", ti1, "x y z", g)
+fx = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
+f1 = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g)
 rng = np.random.default_rng(0)
 x = (rng.standard_normal((nb,n,n,n)) + 1j*rng.standard_normal((nb,n,n,n))).astype(np.complex64)
 yb = np.asarray(fx(jnp.asarray(x)))
@@ -185,9 +204,7 @@ def test_lazy_executor_matches_eager():
     g = ProcGrid.create([1])
     b = Domain((0,), (1,))
     dom = Domain((0, 0, 0), (15, 15, 15))
-    ti = DistTensor.create((b, dom), "b x{0} y z", g)
-    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-    plan = fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g)
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
     rng = np.random.default_rng(3)
     x = jnp.asarray((rng.standard_normal((2, 16, 16, 16))
                      + 1j * rng.standard_normal((2, 16, 16, 16))
@@ -201,9 +218,7 @@ def test_lazy_bf16_executor_precision_bounded():
     g = ProcGrid.create([1])
     b = Domain((0,), (1,))
     dom = Domain((0, 0, 0), (15, 15, 15))
-    ti = DistTensor.create((b, dom), "b x{0} y z", g)
-    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-    plan = fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g)
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
     rng = np.random.default_rng(4)
     x = jnp.asarray((rng.standard_normal((2, 16, 16, 16))
                      + 1j * rng.standard_normal((2, 16, 16, 16))
@@ -217,13 +232,11 @@ def test_lazy_bf16_executor_precision_bounded():
 def test_lazy_executor_distributed(dist):
     script = """
 import numpy as np, jax.numpy as jnp
-from repro.core import ProcGrid, Domain, DistTensor, fftb
+from repro.core import ProcGrid, Domain, fftb
 g = ProcGrid.create([8])
 n, nb = 16, 4
 b = Domain((0,), (nb-1,)); dom = Domain((0,0,0),(n-1,n-1,n-1))
-ti = DistTensor.create((b, dom), "b x{0} y z", g)
-to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-fx = fftb((n,n,n), to, "X Y Z", ti, "x y z", g)
+fx = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
 rng = np.random.default_rng(0)
 x = (rng.standard_normal((nb,n,n,n)) + 1j*rng.standard_normal((nb,n,n,n))).astype(np.complex64)
 ref = np.fft.fftn(x, axes=(1,2,3))

@@ -5,17 +5,14 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_config
+from repro.core.compat import abstract_mesh as _mesh
 from repro.models.model_zoo import build
 from repro.sharding import rules
 
 KEY = jax.random.PRNGKey(0)
-
-
-def _mesh(shape, names):
-    return AbstractMesh(shape, names)
 
 
 SINGLE = _mesh((16, 16), ("data", "model"))
@@ -88,9 +85,8 @@ def test_distributed_train_step_runs(dist):
     """Real 8-device mesh: sharded params, 2 train steps, loss finite."""
     script = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(AxisType.Auto,)*3)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 from repro.configs.base import get_config
 from repro.models.model_zoo import build
 from repro.sharding import ctx, rules
@@ -123,8 +119,8 @@ print("OK", l0, "->", l1)
 def test_grad_compression_train_step_runs(dist):
     script = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2,), ("data",), axis_types=(AxisType.Auto,))
+from repro.core.compat import make_mesh
+mesh = make_mesh((2,), ("data",))
 from repro.configs.base import get_config
 from repro.models.model_zoo import build
 from repro.sharding import ctx

@@ -1,0 +1,356 @@
+"""Arrow-spec builder API: Transform.parse, ExecPolicy, plan derivation
+(inverse/adjoint without re-planning), and the process-global PlanCache."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Domain, ExecPolicy, FftPlan, PlanCache, ProcGrid,
+                        SphereDomain, Transform, dims_string, fftb,
+                        global_plan_cache, parse_dims, parse_transform_spec)
+
+
+@pytest.fixture()
+def g1():
+    return ProcGrid.create([1])
+
+
+def _rand_c64(rng, shape):
+    return (rng.standard_normal(shape)
+            + 1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+# ------------------------------------------------------------ arrow parsing
+def test_parse_dims_dims_string_roundtrip():
+    spec = "b x{0} y{1,2} z"
+    names, dist = parse_dims(spec)
+    assert dims_string(names, dist) == spec
+    names2, dist2 = parse_dims(dims_string(names, dist))
+    assert (names2, dist2) == (names, dist)
+
+
+def test_parse_transform_spec_splits_on_arrow():
+    (inn, ind), (outn, outd) = parse_transform_spec(
+        "b x{0} y z -> b X Y Z{0}")
+    assert inn == ("b", "x", "y", "z")
+    assert ind == {"x": (0,)}
+    assert outn == ("b", "X", "Y", "Z")
+    assert outd == {"Z": (0,)}
+
+
+def test_transform_parse_pairs_and_batch():
+    tr = Transform.parse("b x{0} y z -> b X Y Z{0}")
+    assert tr.fft_pairs == [("x", "X"), ("y", "Y"), ("z", "Z")]
+    assert tr.batch_dims == ("b",)
+    assert tr.in_spec == "b x{0} y z"
+    assert tr.out_spec == "b X Y Z{0}"
+
+
+@pytest.mark.parametrize("bad", [
+    "b x y z",                       # no arrow
+    "x y -> X",                      # rank mismatch
+    "x y -> X Y -> Z W",             # two arrows
+    "x x -> X Y",                    # duplicate dim
+    "x{+} y -> X Y",                 # bad token
+    "b x -> b x",                    # nothing transformed
+    " -> X Y",                       # empty side
+])
+def test_parse_transform_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_transform_spec(bad)
+
+
+def test_parse_dims_rejects_arrow():
+    with pytest.raises(ValueError):
+        parse_dims("x -> X")
+
+
+def test_build_rejects_bad_grid_axis(g1):
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    with pytest.raises(ValueError):
+        # grid axis 1 does not exist on a 1D grid
+        fftb("x{1} y z -> X Y Z{1}", domains=dom, grid=g1)
+
+
+def test_build_rejects_rank_mismatch(g1):
+    dom = Domain((0, 0), (7, 7))
+    with pytest.raises(ValueError):
+        fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
+
+
+def test_transform_is_hashable_and_reusable(g1):
+    tr = Transform.parse("x{0} y z -> X Y Z{0}")
+    assert hash(tr) == hash(Transform.parse("x{0} y z -> X Y Z{0}"))
+    p8 = tr.build(Domain((0, 0, 0), (7, 7, 7)), g1)
+    p16 = tr.build(Domain((0, 0, 0), (15, 15, 15)), g1)
+    assert p8.tin.shape == (8, 8, 8) and p16.tin.shape == (16, 16, 16)
+
+
+# ----------------------------------------------------- acceptance: builder
+def test_fftb_apply_regular_grid(g1):
+    b = Domain((0,), (1,))
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    rng = np.random.default_rng(0)
+    x = _rand_c64(rng, (2, 8, 8, 8))
+    y = np.asarray(fftb.apply("b x{0} y z -> b X Y Z{0}", jnp.asarray(x),
+                              domains=(b, dom), grid=g1))
+    ref = np.fft.fftn(x, axes=(1, 2, 3))
+    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_fftb_apply_sphere_batch(g1):
+    """Sphere input domain selects the plane-wave staged-padding path."""
+    sph = SphereDomain.from_diameter(8)
+    b = Domain((0,), (1,))
+    n = 16
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, sph), grid=g1,
+                sizes=(n, n, n), inverse=True)
+    from repro.core import PlaneWaveFFT
+    assert isinstance(plan, PlaneWaveFFT)
+    rng = np.random.default_rng(1)
+    packed = _rand_c64(rng, (2, sph.npacked))
+    cube = np.asarray(plan.unpack(jnp.asarray(packed)))
+    full = np.zeros((2, n, n, n), np.complex64)
+    full[:, :8, :8, :8] = cube
+    ref = np.fft.ifftn(full, axes=(1, 2, 3))
+    y = np.asarray(plan(jnp.asarray(cube)))
+    np.testing.assert_allclose(y, ref, rtol=3e-4, atol=1e-6)
+    # and the cached-apply form produces the same numbers
+    y2 = np.asarray(fftb.apply("b x{0} y z -> b X Y Z{0}",
+                               jnp.asarray(cube), domains=(b, sph),
+                               grid=g1, sizes=(n, n, n), inverse=True))
+    np.testing.assert_allclose(y2, y, rtol=0, atol=0)
+
+
+# ------------------------------------------------- derived inverse/adjoint
+def test_inverse_roundtrip_without_replanning(g1):
+    b = Domain((0,), (1,))
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g1)
+    before = FftPlan.searches
+    inv = plan.inverse()
+    assert FftPlan.searches == before, "inverse() ran a schedule search"
+    rng = np.random.default_rng(2)
+    x = _rand_c64(rng, (2, 8, 8, 8))
+    rt = np.asarray(inv(plan(jnp.asarray(x))))
+    np.testing.assert_allclose(rt, x, rtol=1e-4, atol=1e-5)
+    # the derived plan maps tout back onto tin
+    assert inv.tin is plan.tout and inv.tout is plan.tin
+
+
+def test_double_inverse_is_original_transform(g1):
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
+    again = plan.inverse().inverse()
+    rng = np.random.default_rng(5)
+    x = _rand_c64(rng, (8, 8, 8))
+    np.testing.assert_allclose(np.asarray(again(jnp.asarray(x))),
+                               np.asarray(plan(jnp.asarray(x))),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_adjoint_inner_product_identity(g1):
+    """<F x, y> == <x, F^H y> for the derived adjoint."""
+    b = Domain((0,), (1,))
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g1)
+    before = FftPlan.searches
+    adj = plan.adjoint()
+    assert FftPlan.searches == before, "adjoint() ran a schedule search"
+    rng = np.random.default_rng(3)
+    x = _rand_c64(rng, (2, 8, 8, 8))
+    y = _rand_c64(rng, (2, 8, 8, 8))
+    lhs = np.vdot(np.asarray(plan(jnp.asarray(x))), y)
+    rhs = np.vdot(x, np.asarray(adj(jnp.asarray(y))))
+    assert abs(lhs - rhs) / abs(lhs) < 1e-4
+
+
+def test_adjoint_of_forward_fft_is_scaled_inverse(g1):
+    """For the unnormalized DFT, F^H = n³ · F⁻¹."""
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
+    rng = np.random.default_rng(4)
+    x = _rand_c64(rng, (8, 8, 8))
+    adj = np.asarray(plan.adjoint()(jnp.asarray(x)))
+    inv = np.asarray(plan.inverse()(jnp.asarray(x)))
+    np.testing.assert_allclose(adj, (8 ** 3) * inv, rtol=1e-4, atol=1e-3)
+
+
+def test_derived_plan_accounting_uses_mirrored_namespace():
+    """inverse()/adjoint() rename stage dims — comm_stats/flop_count work."""
+    g = ProcGrid.create_abstract([4])
+    b = Domain((0,), (3,))
+    dom = Domain((0, 0, 0), (15, 15, 15))
+    plan = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
+    inv = plan.inverse()
+    assert inv.flop_count() == plan.flop_count()
+    fwd_bytes = sum(s["bytes_per_device"] for s in plan.comm_stats())
+    inv_bytes = sum(s["bytes_per_device"] for s in inv.comm_stats())
+    assert inv_bytes == fwd_bytes
+    assert "a2a" in inv.describe()
+
+
+def test_planewave_derived_forward_accounting(g1):
+    from repro.core import make_planewave_pair
+    g = ProcGrid.create_abstract([4])
+    sph = SphereDomain.from_diameter(16)
+    inv, fwd = make_planewave_pair(g, 32, sph, 4)
+    assert fwd.flop_count() == inv.flop_count()
+    assert sum(s["bytes_per_device"] for s in fwd.comm_stats()) == \
+        sum(s["bytes_per_device"] for s in inv.comm_stats())
+
+
+def test_build_rejects_sizes_conflicting_with_out_domains(g1):
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    with pytest.raises(ValueError, match="extent"):
+        fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1,
+             out_domains=dom, sizes=(32, 32, 32))
+
+
+def test_planewave_derived_forward_no_second_search(g1):
+    sph = SphereDomain.from_diameter(8)
+    before = FftPlan.searches
+    from repro.core import make_planewave_pair
+    inv, fwd = make_planewave_pair(g1, 16, sph, 2)
+    assert FftPlan.searches == before + 1, \
+        "a planewave pair should cost exactly one schedule search"
+    rng = np.random.default_rng(6)
+    packed = _rand_c64(rng, (2, sph.npacked))
+    cube = inv.unpack(jnp.asarray(packed))
+    rt = fwd(inv(cube))
+    got = np.asarray(inv.pack(inv.mask_cube(rt)))
+    np.testing.assert_allclose(got, packed, rtol=1e-3, atol=2e-5)
+
+
+# ------------------------------------------------------------- ExecPolicy
+def test_policy_replaces_mode_strings(g1):
+    dom = Domain((0, 0, 0), (15, 15, 15))
+    plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1,
+                policy=ExecPolicy(mode="lazy"))
+    rng = np.random.default_rng(7)
+    x = _rand_c64(rng, (16, 16, 16))
+    ref = np.fft.fftn(x)
+    # default policy (lazy) and legacy mode string agree
+    np.testing.assert_allclose(np.asarray(plan(jnp.asarray(x))), ref,
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(plan(jnp.asarray(x),
+                                               mode="eager")),
+                               ref, rtol=1e-4, atol=1e-3)
+    with pytest.raises(ValueError):
+        plan(jnp.asarray(x), mode="eager", policy=ExecPolicy())
+
+
+def test_policy_legacy_mode_mapping():
+    assert ExecPolicy.from_mode("lazy_bf16") == \
+        ExecPolicy(mode="lazy", compute_dtype="bfloat16")
+    assert ExecPolicy.from_mode("lazy_bf16").legacy_mode == "lazy_bf16"
+    assert ExecPolicy().legacy_mode == "eager"
+    with pytest.raises(ValueError):
+        ExecPolicy.from_mode("warp_speed")
+    with pytest.raises(ValueError):
+        ExecPolicy(mode="lazy_bf16")        # legacy strings only via from_mode
+
+
+def test_policy_check_shapes_gate(g1):
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
+    bad = jnp.ones((4, 4, 4), jnp.complex64)
+    with pytest.raises(ValueError):
+        plan(bad)
+    # unchecked call fails later (or not at all) — but not in the shape gate
+    unchecked = ExecPolicy(check_shapes=False)
+    try:
+        plan(bad, policy=unchecked)
+    except ValueError as e:                           # pragma: no cover
+        assert "input shape" not in str(e)
+
+
+def test_tune_pins_fastest_policy(g1):
+    dom = Domain((0, 0, 0), (15, 15, 15))
+    plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(_rand_c64(rng, (16, 16, 16)))
+    best = plan.tune(x, warmup=1, iters=1)
+    assert isinstance(best, ExecPolicy)
+    assert plan.policy == best          # pinned as the new default
+    ref = np.fft.fftn(np.asarray(x))
+    rel = np.abs(np.asarray(plan(x)) - ref).max() / np.abs(ref).max()
+    assert rel < 3e-2, rel              # winner may be the bf16 executor
+
+
+# -------------------------------------------------------------- PlanCache
+def test_plan_cache_hit_and_miss(g1):
+    cache = PlanCache(maxsize=8)
+    b = Domain((0,), (1,))
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    p1 = fftb.plan_for("b x{0} y z -> b X Y Z{0}", domains=(b, dom),
+                       grid=g1, cache=cache)
+    assert cache.stats["misses"] == 1 and cache.stats["hits"] == 0
+    p2 = fftb.plan_for("b x{0} y z -> b X Y Z{0}", domains=(b, dom),
+                       grid=g1, cache=cache)
+    assert p2 is p1
+    assert cache.stats["hits"] == 1
+    # different key → miss
+    fftb.plan_for("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g1,
+                  inverse=True, cache=cache)
+    assert cache.stats["misses"] == 2
+
+
+def test_repeated_apply_is_cache_hit_no_replanning(g1):
+    """Acceptance: a repeated fftb.apply call never re-runs the planner."""
+    cache = global_plan_cache()
+    cache.clear()
+    b = Domain((0,), (1,))
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(_rand_c64(rng, (2, 8, 8, 8)))
+    fftb.apply("b x{0} y z -> b X Y Z{0}", x, domains=(b, dom), grid=g1)
+    searches = FftPlan.searches
+    y = fftb.apply("b x{0} y z -> b X Y Z{0}", x, domains=(b, dom), grid=g1)
+    assert FftPlan.searches == searches, "second apply re-planned"
+    assert cache.stats["hits"] == 1
+    np.testing.assert_allclose(np.asarray(y),
+                               np.fft.fftn(np.asarray(x), axes=(1, 2, 3)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_plan_cache_key_separates_policy_and_sphere(g1):
+    cache = PlanCache()
+    dom = Domain((0, 0, 0), (7, 7, 7))
+    lazy = ExecPolicy(mode="lazy")
+    a = fftb.plan_for("x{0} y z -> X Y Z{0}", domains=dom, grid=g1,
+                      cache=cache)
+    c = fftb.plan_for("x{0} y z -> X Y Z{0}", domains=dom, grid=g1,
+                      policy=lazy, cache=cache)
+    assert a is not c and c.policy == lazy
+    # sphere of equal bounding box but different radius must not collide
+    s1 = SphereDomain.from_diameter(8)
+    s2 = SphereDomain(radius=3.0, lower=(0, 0, 0), upper=(7, 7, 7),
+                      center=(3.5, 3.5, 3.5))
+    b = Domain((0,), (1,))
+    pw1 = fftb.plan_for("b x y z -> b X Y Z", domains=(b, s1), grid=g1,
+                        sizes=(16, 16, 16), inverse=True, cache=cache)
+    pw2 = fftb.plan_for("b x y z -> b X Y Z", domains=(b, s2), grid=g1,
+                        sizes=(16, 16, 16), inverse=True, cache=cache)
+    assert pw1 is not pw2
+    assert pw1.sphere.npacked != pw2.sphere.npacked
+
+
+def test_plan_cache_lru_eviction(g1):
+    cache = PlanCache(maxsize=2)
+    doms = [Domain((0, 0, 0), (n - 1, n - 1, n - 1)) for n in (4, 8, 16)]
+
+    def build(d):
+        return fftb.plan_for("x{0} y z -> X Y Z{0}", domains=d, grid=g1,
+                             cache=cache)
+
+    p0 = build(doms[0])
+    build(doms[1])
+    build(doms[0])                        # refresh dom0 → dom1 becomes LRU
+    build(doms[2])                        # evicts dom1
+    assert len(cache) == 2
+    assert cache.stats["evictions"] == 1
+    assert build(doms[0]) is p0           # still cached
+    misses = cache.stats["misses"]
+    build(doms[1])                        # was evicted → rebuild
+    assert cache.stats["misses"] == misses + 1
