@@ -10,11 +10,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * train/decode_step   — reduced-config step microbenches (measured, CPU)
 
 ``derived`` column: modeled ms for fig9 rows, speedup/ratios elsewhere.
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+The SCF scenario additionally writes machine-readable ``BENCH_scf.json``
+(transforms/s, iterations to convergence, plan-cache hit rate) so the perf
+trajectory can be tracked across commits.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -213,6 +218,49 @@ def bench_fig9(rows):
                              round(_fig9_time(inv.plan), 3)))
 
 
+def bench_scf(rows, quick=False):
+    """repro.dft SCF scenario — the paper's end-to-end workload.
+
+    Two k-points (two distinct sphere plans) + the full-cube Hartree pair,
+    mixing-driven SCF.  Returns the machine-readable record written to
+    BENCH_scf.json.
+    """
+    import jax
+    from repro.core import global_plan_cache
+    from repro.dft import SCFConfig, run_scf
+    cfg = SCFConfig(n=16, nbands=4, kpts=((0, 0, 0), (0.5, 0.5, 0.5)),
+                    max_iter=20 if quick else 50,
+                    e_tol=1e-4 if quick else 1e-5,
+                    r_tol=1e-3 if quick else 1e-4)
+    global_plan_cache().clear()
+    res = run_scf(cfg)
+    c = res.cache_stats
+    lookups = c["hits"] + c["misses"]
+    hit_rate = c["hits"] / max(lookups, 1)
+    rows.append(("scf_outer_iteration",
+                 res.seconds / max(res.iterations, 1) * 1e6,
+                 res.iterations))
+    rows.append(("scf_transforms_per_s", 0.0,
+                 round(res.transforms_per_s, 1)))
+    rows.append(("scf_cache_hit_rate", 0.0, round(hit_rate, 4)))
+    return {
+        "scenario": {
+            "n": cfg.n, "nbands": cfg.nbands, "kpts": list(cfg.kpts),
+            "max_iter": cfg.max_iter, "e_tol": cfg.e_tol,
+            "devices": jax.device_count(), "quick": bool(quick),
+        },
+        "converged": bool(res.converged),
+        "scf_iterations": res.iterations,
+        "total_energy": res.energy,
+        "transforms": res.transforms,
+        "transforms_unit": "per-band 3D transforms (plans batch bands)",
+        "transforms_per_s": round(res.transforms_per_s, 2),
+        "seconds": round(res.seconds, 3),
+        "plan_cache": {"hits": c["hits"], "misses": c["misses"],
+                       "hit_rate": round(hit_rate, 4)},
+    }
+
+
 def bench_steps(rows):
     import jax
     import jax.numpy as jnp
@@ -244,6 +292,8 @@ def bench_steps(rows):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_scf.json",
+                    help="path for the machine-readable SCF record")
     args = ap.parse_args(argv)
     rows: list[tuple[str, float, object]] = []
     bench_table1(rows)
@@ -251,11 +301,16 @@ def main(argv=None) -> None:
     bench_local_fft(rows, args.quick)
     bench_planewave(rows, args.quick)
     bench_fig9(rows)
+    scf_record = bench_scf(rows, args.quick)
     if not args.quick:
         bench_steps(rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    with open(args.json_out, "w") as f:
+        json.dump(scf_record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json_out}")
 
 
 if __name__ == '__main__':

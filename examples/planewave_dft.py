@@ -1,123 +1,77 @@
-"""Plane-wave DFT mini-app — the paper's target application, end to end.
+"""Plane-wave DFT — thin CLI over the ``repro.dft`` SCF subsystem.
 
-Solves the lowest bands of a Kohn-Sham-like eigenproblem
-    H ψ = (−½∇² + V_loc) ψ
-in a plane-wave basis truncated to the cut-off sphere (paper Fig. 2/7),
-using the *all-band* preconditioned steepest-descent/CG iteration the paper
-describes (§2.2): every step applies batched FFTB transforms
-sphere→real-space (apply V) →sphere, exactly the red-line workload of
-Fig. 9. Bands are kept orthonormal with a Gram-Schmidt (QR) step — the
-matrix-matrix form that batching enables.
+The paper's target application, end to end: a self-consistent Kohn-Sham
+calculation where every hot operation is an FFTB plan — per-k-point sphere
+transforms (a batch of *different* spheres, bands batched within each, one
+plan per sphere served from the process-global PlanCache) interleaved with
+full-cube density/potential transforms for the G-space Hartree solve.
 
-The forward transform is *derived* from the inverse plan (one schedule
-search per pair), and the execution policy is declarative: pass
-``--policy lazy_bf16`` to pin an executor, or ``--policy tune`` to let
-``plan.tune()`` race the candidates and pin the fastest.
-
-Run:  PYTHONPATH=src python examples/planewave_dft.py [--n 32] [--bands 8]
-      (XLA_FLAGS=--xla_force_host_platform_device_count=8 to distribute)
+Run:  PYTHONPATH=src python examples/planewave_dft.py \\
+          [--n 16] [--bands 4] [--kpts "0,0,0;0.5,0.5,0.5"]
+      (XLA_FLAGS=--xla_force_host_platform_device_count=4 to distribute)
 """
 import argparse
-import time
 
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import (ExecPolicy, ProcGrid, SphereDomain,
-                        make_planewave_pair)
+from repro.core import ExecPolicy, global_plan_cache
+from repro.dft import SCFConfig, run_scf
 
 
-def build_hamiltonian(n, sph, inv, fwd):
-    """Kinetic |g|²/2 on sphere coefficients + Gaussian wells in real
-    space — a minimal but faithful plane-wave Hamiltonian."""
-    idx = np.argwhere(sph.mask())
-    g2 = ((idx - np.asarray(sph.center)) ** 2).sum(1).astype(np.float32)
-    kin = jnp.asarray(0.5 * g2 * (2 * np.pi / n) ** 2)
-    xs = np.stack(np.meshgrid(*[np.arange(n)] * 3, indexing="ij"), -1)
-    centers = [(n * 0.3,) * 3, (n * 0.7,) * 3]
-    v = np.zeros((n, n, n), np.float32)
-    for c in centers:
-        v -= 4.0 * np.exp(-((xs - np.asarray(c)) ** 2).sum(-1)
-                          / (2 * (n / 16) ** 2))
-    vloc = jnp.asarray(v)
-
-    def h_apply(c):                       # c: (nb, npacked)
-        psi = inv(inv.unpack(c))          # sphere → real space (batched)
-        hv = fwd(psi * vloc)              # V ψ, back to sphere cube
-        return kin * c + inv.pack(hv)
-
-    return h_apply, kin
-
-
-def orthonormalize(c):
-    q, _ = jnp.linalg.qr(c.T)             # bands are columns
-    return q.T
+def parse_kpts(spec: str):
+    """'0,0,0;0.5,0.5,0.5' → ((0,0,0), (0.5,0.5,0.5))."""
+    return tuple(tuple(float(x) for x in part.split(","))
+                 for part in spec.split(";") if part.strip())
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=32)
-    ap.add_argument("--bands", type=int, default=8)
-    ap.add_argument("--iters", type=int, default=40)
-    ap.add_argument("--lr", type=float, default=0.3)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=16, help="FFT cube width")
+    ap.add_argument("--diameter", type=int, default=None,
+                    help="cut-off sphere diameter (default n/2)")
+    ap.add_argument("--bands", type=int, default=4)
+    ap.add_argument("--kpts", default="0,0,0;0.5,0.5,0.5",
+                    help="semicolon-separated reduced k-points")
+    ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--inner-steps", type=int, default=4)
+    ap.add_argument("--mix-alpha", type=float, default=0.7)
+    ap.add_argument("--depth", type=float, default=4.0)
+    ap.add_argument("--no-xc", action="store_true",
+                    help="drop the LDA exchange term")
     ap.add_argument("--policy", default="eager",
-                    choices=["eager", "lazy", "lazy_bf16", "tune"])
+                    choices=["eager", "lazy", "lazy_bf16"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    nproc = len(jax.devices())
-    g = ProcGrid.create([nproc])
-    sph = SphereDomain.from_diameter(args.n // 2)
-    policy = None if args.policy == "tune" \
-        else ExecPolicy.from_mode(args.policy)
-    inv, fwd = make_planewave_pair(g, args.n, sph, args.bands,
-                                   policy=policy)
-    print(f"grid={g}  sphere d={sph.extents[0]} "
-          f"({sph.npacked} coeffs = {sph.npacked/args.n**3:.1%} of cube)")
-    print(inv.describe())
-    if args.policy == "tune":
-        d = sph.extents[0]
-        probe = jnp.ones((args.bands, d, d, d), jnp.complex64)
-        fwd.policy = inv.tune(probe)      # pair shares the winning policy
-        print("tuned:", inv.policy)
+    cfg = SCFConfig(
+        n=args.n, diameter=args.diameter, nbands=args.bands,
+        kpts=parse_kpts(args.kpts), max_iter=args.iters, e_tol=args.tol,
+        inner_steps=args.inner_steps, mix_alpha=args.mix_alpha,
+        depth=args.depth, xc=not args.no_xc, seed=args.seed,
+        policy=ExecPolicy.from_mode(args.policy))
 
-    h_apply, kin = build_hamiltonian(args.n, sph, inv, fwd)
-    precond = 1.0 / (1.0 + jnp.asarray(kin))      # kinetic preconditioner
+    import jax
+    print(f"devices={jax.device_count()}  n={cfg.n}  bands={cfg.nbands}  "
+          f"k-points={len(cfg.kpts)}")
 
-    @jax.jit
-    def step(c):
-        hc = h_apply(c)
-        lam = jnp.sum(jnp.conj(c) * hc, axis=1).real      # Rayleigh
-        grad = hc - lam[:, None] * c
-        c = c - args.lr * (precond[None, :] * grad)
-        return orthonormalize(c), lam, jnp.linalg.norm(grad, axis=1)
+    def progress(it, e, r):
+        if it % 5 == 0:
+            print(f"iter {it:3d}  E = {e:+.7f}  |Δρ| = {r:.3e}")
 
-    rng = np.random.default_rng(0)
-    c = (rng.standard_normal((args.bands, sph.npacked))
-         + 1j * rng.standard_normal((args.bands, sph.npacked))
-         ).astype(np.complex64)
-    c = np.asarray(orthonormalize(jnp.asarray(c)))
-    c = jnp.asarray(c)
+    res = run_scf(cfg, callback=progress)
 
-    t0 = time.perf_counter()
-    hist = []
-    for it in range(args.iters):
-        c, lam, res = step(c)
-        e = float(lam.sum())
-        hist.append(e)
-        if it % 5 == 0 or it == args.iters - 1:
-            print(f"iter {it:3d}  E = {e:+.6f}  max|res| = "
-                  f"{float(res.max()):.3e}")
-    dt = time.perf_counter() - t0
-    ffts = args.iters * 2 * args.bands            # fwd+inv per band per it
-    print(f"\n{args.iters} all-band iterations in {dt:.2f}s "
-          f"({ffts} batched 3D transforms, "
-          f"{ffts/dt:.1f} transforms/s on {nproc} device(s))")
-    assert hist[-1] < hist[0], "energy must decrease"
-    drops = sum(1 for a, b in zip(hist, hist[1:]) if b > a + 1e-4)
-    print(f"energy decreased {hist[0]:+.4f} → {hist[-1]:+.4f} "
-          f"({drops} non-monotone steps)")
+    print(f"\n{'converged' if res.converged else 'NOT converged'} in "
+          f"{res.iterations} iterations:  E = {res.energy:+.7f}")
+    for ik, eps in enumerate(res.eigenvalues):
+        print(f"  k[{ik}] eigenvalues: "
+              + "  ".join(f"{e:+.4f}" for e in eps))
+    print(f"{res.transforms} per-band 3D transforms in {res.seconds:.2f}s "
+          f"({res.transforms_per_s:.1f} transforms/s, batched over "
+          f"{cfg.nbands} bands per plan call)")
+    c = res.cache_stats
+    total = c["hits"] + c["misses"]
+    print(f"plan cache: {c['misses']} builds, {c['hits']} hits "
+          f"({c['hits'] / max(total, 1):.1%} hit rate) — "
+          f"{global_plan_cache()!r}")
 
 
 if __name__ == "__main__":

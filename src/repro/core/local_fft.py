@@ -52,6 +52,27 @@ def dft_matrix(n_out: int, n_in: int, inverse: bool) -> np.ndarray:
     return _dft_matrix_np(n_in, inverse)[:n_out, :]
 
 
+@functools.lru_cache(maxsize=128)
+def dft_matrix_device(n_out: int, n_in: int, inverse: bool):
+    """Device-resident f32 (real, imag, real+imag) planes of ``dft_matrix``.
+
+    The matmul executors split W into real planes; building them with
+    ``jnp.asarray`` per call re-uploads the matrix host→device on every
+    stage execution (and re-embeds it on every trace).  Caching the device
+    arrays per (n_out, n_in, inverse) makes repeated stage execution — the
+    SCF loop's thousands of identical line-DFT stages — transfer-free.
+    The sum plane feeds the lazy executor's Gauss 3-mult product.
+
+    ``ensure_compile_time_eval`` keeps the construction eager even when the
+    first request happens inside a jit/shard_map trace — otherwise the
+    cache would capture (and leak) tracers instead of device arrays.
+    """
+    w = dft_matrix(n_out, n_in, inverse)
+    with jax.ensure_compile_time_eval():
+        return (jnp.asarray(w.real), jnp.asarray(w.imag),
+                jnp.asarray(w.real + w.imag))
+
+
 def _move_last(x, axis):
     return jnp.moveaxis(x, axis, -1)
 
@@ -72,9 +93,7 @@ def _jnp_backend(x, axis, n_in, n_out, inverse):
 
 
 def _matmul_backend(x, axis, n_in, n_out, inverse):
-    w = dft_matrix(n_out, n_in, inverse)
-    wr = jnp.asarray(w.real)
-    wi = jnp.asarray(w.imag)
+    wr, wi, _ = dft_matrix_device(n_out, n_in, inverse)
     xm = _move_last(x, axis)
     xr, xi = jnp.real(xm), jnp.imag(xm)
     # y = x @ W^T with complex split into real MXU GEMMs

@@ -144,6 +144,12 @@ class Plan:
             if best_t is None or dt < best_t:
                 best, best_t = pol, dt
         self.policy = best
+        # memoized mirrors inherited the pre-tune policy — keep the pair
+        # in sync, as a freshly derived mirror would be
+        for attr in ("_inverse_memo", "_adjoint_memo"):
+            memo = getattr(self, attr, None)
+            if memo is not None:
+                memo.policy = best
         return best
 
     # ------------------------------------------------------------- mirrors
@@ -151,13 +157,37 @@ class Plan:
         """The mirror transform tout→tin, derived by reversing stages (no
         second schedule search).  Exact inverse for square transforms; for
         rectangular (pad/truncate) stages it is the mirror on the retained
-        subspace."""
-        raise NotImplementedError
+        subspace.
+
+        Memoized, with the mirror back-linked: repeated calls return the
+        same object and ``plan.inverse().inverse() is plan`` — so a plan
+        pair held in the PlanCache is derived once process-wide.  The
+        mirror carries the policy current at derivation time (``tune()``
+        re-syncs the pair); assign ``mirror.policy`` to diverge.
+        """
+        memo = getattr(self, "_inverse_memo", None)
+        if memo is None:
+            memo = self._derive_inverse()
+            memo._inverse_memo = self
+            self._inverse_memo = memo
+        return memo
 
     def adjoint(self) -> "Plan":
         """The conjugate-transpose operator tout→tin, same derived stage
         list as ``inverse()`` with the DFT normalization factors flipped
-        (adjoint of unnormalized DFT_N is N·iDFT_N)."""
+        (adjoint of unnormalized DFT_N is N·iDFT_N).  Memoized and
+        back-linked like ``inverse()``."""
+        memo = getattr(self, "_adjoint_memo", None)
+        if memo is None:
+            memo = self._derive_adjoint()
+            memo._adjoint_memo = self
+            self._adjoint_memo = memo
+        return memo
+
+    def _derive_inverse(self) -> "Plan":
+        raise NotImplementedError
+
+    def _derive_adjoint(self) -> "Plan":
         raise NotImplementedError
 
     # ---------------------------------------------------------- accounting
@@ -322,7 +352,7 @@ class FftPlan(Plan):
                          and tgt[len(cur)] == axis)
                 return (
                     0 if wants else 1,                       # final home first
-                    0 if (t in done or t in batch_dims) else 1,  # avoid re-free
+                    0 if (t in done or t in batch_dims) else 1,  # no re-free
                     -local(t),                               # roomiest
                 )
             return min(cands, key=score)
@@ -363,10 +393,10 @@ class FftPlan(Plan):
                        inverse=not self.is_inverse, backend=self.backend,
                        policy=self.policy, _stages=stages, _scale=scale)
 
-    def inverse(self) -> "FftPlan":
+    def _derive_inverse(self) -> "FftPlan":
         return self._mirror(1.0 / self.scale if self.scale != 1.0 else 1.0)
 
-    def adjoint(self) -> "FftPlan":
+    def _derive_adjoint(self) -> "FftPlan":
         # adjoint of sliced DFT_N is N · sliced iDFT_N (and vice versa):
         # the mirrored stage list times the product of flipped norms.
         scale = self.scale
@@ -396,16 +426,17 @@ class FftPlan(Plan):
         end-to-end, so nothing ever interleaves.  Same stages, same
         collectives — only the local data movement differs.
         """
-        from .local_fft import dft_matrix
+        from .local_fft import dft_matrix_device
         perm = list(range(x.ndim))        # perm[i] = logical dim at pos i
         xr = jnp.real(x).astype(compute_dtype)
         xi = jnp.imag(x).astype(compute_dtype)
         for st in self.stages:
             if isinstance(st, FFTStage):
                 pos = perm.index(st.index)
-                w = dft_matrix(st.n_out, st.n_in, st.inverse)
-                wr = jnp.asarray(w.real).astype(compute_dtype)
-                wi = jnp.asarray(w.imag).astype(compute_dtype)
+                wr, wi, ws = dft_matrix_device(st.n_out, st.n_in,
+                                               st.inverse)
+                wr = wr.astype(compute_dtype)
+                wi = wi.astype(compute_dtype)
                 dn = (((pos,), (1,)), ((), ()))
 
                 def dot(a, b):
@@ -418,7 +449,7 @@ class FftPlan(Plan):
                 m1 = dot(xr, wr)
                 m2 = dot(xi, wi)
                 m3 = dot((xr + xi).astype(compute_dtype),
-                         jnp.asarray(w.real + w.imag).astype(compute_dtype))
+                         ws.astype(compute_dtype))
                 xr = (m1 - m2).astype(compute_dtype)
                 xi = (m3 - m1 - m2).astype(compute_dtype)
                 perm = [p for i, p in enumerate(perm) if i != pos] \

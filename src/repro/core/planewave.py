@@ -66,8 +66,16 @@ class PlaneWaveFFT(Plan):
     def from_tensors(sizes, tout, out_names, tin, in_names, grid, *,
                      inverse: bool, backend: str = "matmul",
                      policy: ExecPolicy | None = None):
-        sphere = next(d for d in (tin if inverse else tout).domains
-                      if isinstance(d, SphereDomain))
+        side = tin if inverse else tout
+        sphere = next((d for d in side.domains
+                       if isinstance(d, SphereDomain)), None)
+        if sphere is None:
+            which = "input" if inverse else "output"
+            kinds = [type(d).__name__ for d in side.domains]
+            raise ValueError(
+                f"PlaneWaveFFT needs a SphereDomain among the {which} "
+                f"domains (the packed side of the transform); got "
+                f"{kinds} for dims {side.dims}")
         pairs = list(zip(in_names, out_names))
         return PlaneWaveFFT(sphere, sizes, tin, tout, inverse=inverse,
                             backend=backend, pairs=pairs, policy=policy)
@@ -96,12 +104,12 @@ class PlaneWaveFFT(Plan):
                             backend=self.backend, pairs=plan.fft_pairs,
                             policy=self.policy, plan=plan)
 
-    def inverse(self) -> "PlaneWaveFFT":
+    def _derive_inverse(self) -> "PlaneWaveFFT":
         """Derived mirror transform (no second schedule search): the
         inverse of a staged-pad plan is the staged-truncate plan."""
         return self._mirror(self.plan.inverse())
 
-    def adjoint(self) -> "PlaneWaveFFT":
+    def _derive_adjoint(self) -> "PlaneWaveFFT":
         return self._mirror(self.plan.adjoint())
 
     # ------------------------------------------------- sphere pack/unpack

@@ -1,0 +1,36 @@
+"""repro.dft — the plane-wave SCF workload the FFT framework was built for.
+
+A self-consistent Kohn-Sham-like calculation run entirely on FFTB plans:
+
+  * ``basis``       per-k-point cut-off spheres (a *batch of different
+                    spheres*), G-vector / |G+k|² bookkeeping, plan retrieval
+                    through the process-global ``PlanCache``
+  * ``hamiltonian`` kinetic on packed coefficients + local-potential apply
+                    via band-batched sphere→cube→sphere round-trips
+  * ``density``     ρ(r) = Σ_{k,b} w_k f_b |ψ_kb(r)|², accumulated sharded
+  * ``hartree``     Poisson solve in G-space on the full-cube plan pair
+  * ``potentials``  Gaussian-well external potential + LDA-style exchange
+  * ``scf``         the mixing-driven SCF driver (linear + Anderson/Pulay)
+
+Quickstart::
+
+    from repro.dft import SCFConfig, run_scf
+    res = run_scf(SCFConfig(n=16, nbands=4,
+                            kpts=((0, 0, 0), (0.5, 0.5, 0.5))))
+    print(res.energy, res.converged, res.cache_stats)
+"""
+
+from .basis import CUBE_SPEC, PW_SPEC, PlaneWaveBasis
+from .density import density_from_orbitals
+from .hamiltonian import apply_hamiltonian, update_bands
+from .hartree import HartreeSolver, coulomb_kernel
+from .potentials import gaussian_wells, lda_exchange
+from .scf import (AndersonMixer, LinearMixer, SCFConfig, SCFResult, run_scf,
+                  total_energy)
+
+__all__ = [
+    "PlaneWaveBasis", "PW_SPEC", "CUBE_SPEC", "density_from_orbitals",
+    "apply_hamiltonian", "update_bands", "HartreeSolver", "coulomb_kernel",
+    "gaussian_wells", "lda_exchange", "SCFConfig", "SCFResult", "run_scf",
+    "total_energy", "LinearMixer", "AndersonMixer",
+]

@@ -1,0 +1,150 @@
+"""Per-k-point plane-wave bases — a batch of *different* spheres.
+
+Every k-point carries its own cut-off sphere: the Bloch factor e^{ik·r}
+shifts the kinetic-energy paraboloid, so the set of plane waves with
+½|G+k|² ≤ E_cut is a sphere whose *center* moves with k (paper §2.2 — "one
+sphere per k-point, bands batched within each").  All spheres share one
+d³ bounding box and one n³ FFT cube, so every k-point's transform has the
+same data layout but a *different* static pack/unpack table — exactly the
+multi-plan traffic the process-global ``PlanCache`` exists for: distinct
+spheres build distinct plans, repeated spheres (and every later SCF
+iteration) hit the cache.
+
+Units: cubic cell of side ``L`` (default: ``n`` grid spacings of 1), so a
+reciprocal-lattice step is 2π/L.  k-points are given in reduced coordinates
+(units of 2π/L).  The sphere is centered at c_k = c0 + k, and the kinetic
+energy of packed coefficient at cube index ``idx`` is
+½(2π/L)²|idx − c_k|² — the cut-off rule and the kinetic ladder agree by
+construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Domain, ProcGrid, SphereDomain, fftb
+from repro.core.policy import ExecPolicy
+
+#: sphere bounding-cube (bands, x, y, z) → real-space cube, x/Z sharded
+PW_SPEC = "b x{0} y z -> b X Y Z{0}"
+#: full density/potential cube, real space (z-sharded) → G space (Z-sharded)
+CUBE_SPEC = "x y z{0} -> X Y Z{0}"
+
+
+class PlaneWaveBasis:
+    """Shared FFT cube + per-k-point spheres, plans served from the cache.
+
+    Plans are *not* stored on the instance: ``plans_for_k``/``cube_plans``
+    go through ``fftb.plan_for`` (the process-global ``PlanCache``) on every
+    call, so plan reuse across SCF iterations — and across bases that happen
+    to request the same sphere — is the cache's hit counter, not a private
+    dict.  Derived mirrors are memoized on the plan itself (``inverse()``),
+    so a pair costs one schedule search process-wide.
+    """
+
+    def __init__(self, n: int, *, diameter: int | None = None,
+                 kpts=((0.0, 0.0, 0.0),), weights=None, nbands: int = 4,
+                 L: float | None = None, grid: ProcGrid | None = None,
+                 policy: ExecPolicy | None = None, backend: str = "matmul"):
+        self.n = int(n)
+        self.d = int(diameter) if diameter is not None else self.n // 2
+        if not 0 < self.d <= self.n:
+            raise ValueError(f"sphere diameter {self.d} not in (0, {n}]")
+        self.L = float(L) if L is not None else float(n)
+        self.grid = grid if grid is not None else \
+            ProcGrid.create([jax.device_count()])
+        self.nbands = int(nbands)
+        self.policy = policy
+        self.backend = backend
+
+        self.kpts = np.atleast_2d(np.asarray(kpts, np.float64))
+        if self.kpts.shape[1] != 3:
+            raise ValueError(f"kpts must be (nk, 3), got {self.kpts.shape}")
+        nk = self.kpts.shape[0]
+        if weights is None:
+            self.weights = np.full(nk, 1.0 / nk)
+        else:
+            self.weights = np.asarray(weights, np.float64)
+            if self.weights.shape != (nk,):
+                raise ValueError("one weight per k-point")
+            self.weights = self.weights / self.weights.sum()
+
+        c0 = (self.d - 1) / 2.0
+        self.spheres = [
+            SphereDomain(radius=self.d / 2.0,
+                         center=tuple(c0 + k for k in kp),
+                         lower=(0, 0, 0),
+                         upper=(self.d - 1,) * 3)
+            for kp in self.kpts
+        ]
+        self.bdom = Domain((0,), (self.nbands - 1,))
+        self.cube = Domain((0, 0, 0), (self.n - 1,) * 3)
+        self._kin = [None] * nk
+        self._gvec = [None] * nk
+
+    # ----------------------------------------------------------------- size
+    @property
+    def nk(self) -> int:
+        return self.kpts.shape[0]
+
+    @property
+    def cell_volume(self) -> float:
+        return self.L ** 3
+
+    @property
+    def dv(self) -> float:
+        """Real-space integration element ΔV = Ω / n³."""
+        return (self.L / self.n) ** 3
+
+    def npacked(self, ik: int) -> int:
+        return self.spheres[ik].npacked
+
+    # ------------------------------------------------------- G bookkeeping
+    def gvectors(self, ik: int) -> np.ndarray:
+        """(npacked, 3) G+k offsets from the sphere center, in units 2π/L.
+
+        CSR (pack) order — aligned with the packed coefficient vector."""
+        if self._gvec[ik] is None:
+            sph = self.spheres[ik]
+            ex, ey, ez = sph.extents
+            flat = sph.pack_indices()
+            idx = np.stack([flat // (ey * ez), (flat // ez) % ey,
+                            flat % ez], axis=1).astype(np.float64)
+            self._gvec[ik] = idx - np.asarray(sph.center)
+        return self._gvec[ik]
+
+    def kinetic(self, ik: int):
+        """½|G+k|² diagonal over packed coefficients (f32, on device)."""
+        if self._kin[ik] is None:
+            g = self.gvectors(ik)
+            g2 = (g ** 2).sum(1) * (2 * np.pi / self.L) ** 2
+            self._kin[ik] = jnp.asarray(0.5 * g2.astype(np.float32))
+        return self._kin[ik]
+
+    # ----------------------------------------------------------------- plans
+    def plans_for_k(self, ik: int):
+        """(inverse, forward) sphere↔cube pair for k-point ``ik``.
+
+        Served from the process-global PlanCache — the first request per
+        distinct sphere builds (one schedule search), every later request
+        (same k re-visited, next SCF iteration, a symmetry-equivalent
+        k-point) is a cache hit.
+        """
+        inv = fftb.plan_for(
+            PW_SPEC, domains=(self.bdom, self.spheres[ik]), grid=self.grid,
+            sizes=(self.n,) * 3, inverse=True, backend=self.backend,
+            policy=self.policy)
+        return inv, inv.inverse()       # mirror is memoized on the plan
+
+    def cube_plans(self):
+        """(forward, inverse) full-cube pair for density/potential fields."""
+        fwd = fftb.plan_for(
+            CUBE_SPEC, domains=self.cube, grid=self.grid,
+            backend=self.backend, policy=self.policy)
+        return fwd, fwd.inverse()       # mirror is memoized on the plan
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"PlaneWaveBasis(n={self.n}, d={self.d}, nk={self.nk}, "
+                f"nbands={self.nbands}, grid={self.grid})")

@@ -1,0 +1,43 @@
+"""Electron density from sphere-packed orbitals.
+
+    ρ(r) = (n³/ΔV) Σ_k w_k Σ_b f_kb |ψ_kb(r)|²
+
+with ψ = ifft(c) the *unnormalized* inverse transform of unit-norm packed
+coefficients (Σ_G |c_G|² = 1 ⇒ Σ_r |ψ_r|² = 1/n³), so the prefactor makes
+each occupied orbital integrate to one electron: Σ_r ρ ΔV = Σ w·f.
+
+The per-k inverse plans come from the plan cache (one batched transform per
+k-point, bands batched); the accumulation runs on the real-space cubes as
+they come out of the plans — z-sharded on a multi-device grid — so the sum
+over bands and k-points never gathers the mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def density_from_orbitals(basis, coeffs, occ) -> jnp.ndarray:
+    """ρ(r) on the n³ cube (f32) from per-k packed coefficient blocks.
+
+    coeffs: list of (nbands, npacked_k) complex blocks, one per k-point
+    occ:    (nk, nbands) occupation numbers f_kb
+    """
+    occ = np.asarray(occ, np.float64)
+    if occ.shape != (basis.nk, basis.nbands):
+        raise ValueError(
+            f"occ shape {occ.shape} != (nk, nbands) = "
+            f"({basis.nk}, {basis.nbands})")
+    rho = jnp.zeros((basis.n,) * 3, jnp.float32)
+    for ik, c in enumerate(coeffs):
+        inv, _ = basis.plans_for_k(ik)
+        psi = inv(inv.unpack(c))                      # (nb, n, n, n) sharded
+        f = jnp.asarray((basis.weights[ik] * occ[ik]).astype(np.float32))
+        rho = rho + jnp.tensordot(f, jnp.abs(psi) ** 2, axes=(0, 0))
+    return rho * jnp.float32(basis.n ** 3 / basis.dv)
+
+
+def electron_count(basis, rho) -> float:
+    """∫ ρ dr — sanity invariant (should equal Σ_k w_k Σ_b f_kb)."""
+    return float(jnp.sum(rho) * basis.dv)

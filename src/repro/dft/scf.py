@@ -1,0 +1,262 @@
+"""Mixing-driven SCF loop over the plane-wave basis.
+
+Each outer iteration: build v_eff = v_ext + v_H[ρ] + v_xc[ρ], update all
+bands at every k-point (batched H applies through cached plans), rebuild
+the density from the new orbitals, evaluate the total energy
+
+    E = Σ_k w_k Σ_b f ⟨c|T|c⟩ + ∫ρ v_ext + E_H[ρ] + E_xc[ρ]
+
+and mix ρ_in/ρ_out — plain linear mixing for the warm-up iterations, then
+Anderson/Pulay acceleration on the stored residual history.  Convergence is
+declared when |ΔE| stays below ``e_tol`` (and the density residual below
+``r_tol``) after the warm-up.
+
+The orchestration is deliberately eager Python: every transform goes
+through a plan fetched from the process-global ``PlanCache`` (the per-plan
+executors are jitted ``shard_map``s), so the cache's hit counter is the
+subsystem's plan-reuse ledger and ``SCFResult.transforms`` counts real
+batched 3D transforms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import ProcGrid, global_plan_cache
+from repro.core.policy import ExecPolicy
+
+from .basis import PlaneWaveBasis
+from .density import density_from_orbitals, electron_count
+from .hamiltonian import orthonormalize, update_bands
+from .hartree import HartreeSolver
+from .potentials import gaussian_wells, lda_exchange
+
+
+# -------------------------------------------------------------------- mixing
+class LinearMixer:
+    """ρ ← ρ_in + α (ρ_out − ρ_in)."""
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = float(alpha)
+
+    def mix(self, rho_in, rho_out):
+        return rho_in + self.alpha * (rho_out - rho_in)
+
+
+class AndersonMixer:
+    """Anderson/Pulay (DIIS) density mixing on the residual history.
+
+    Minimizes |Σ_i β_i r_i|² over Σ β_i = 1 (r_i = ρ_out,i − ρ_in,i), then
+    takes ρ ← Σ β_i (ρ_in,i + α r_i).  Falls back to linear mixing for the
+    first ``warmup`` iterations and whenever the DIIS system is singular.
+    """
+
+    def __init__(self, alpha: float = 0.5, history: int = 4,
+                 warmup: int = 2):
+        self.alpha = float(alpha)
+        self.history = int(history)
+        self.warmup = int(warmup)
+        self._rho_in: list[np.ndarray] = []
+        self._res: list[np.ndarray] = []
+        self._seen = 0
+
+    def mix(self, rho_in, rho_out):
+        rin = np.asarray(rho_in, np.float64).ravel()
+        res = np.asarray(rho_out, np.float64).ravel() - rin
+        self._rho_in.append(rin)
+        self._res.append(res)
+        if len(self._res) > self.history:
+            self._rho_in.pop(0)
+            self._res.pop(0)
+        self._seen += 1
+        m = len(self._res)
+        if self._seen <= self.warmup or m < 2:
+            mixed = rin + self.alpha * res
+        else:
+            r = np.stack(self._res)                       # (m, N)
+            a = np.empty((m + 1, m + 1))
+            a[:m, :m] = r @ r.T
+            a[m, :m] = a[:m, m] = 1.0
+            a[m, m] = 0.0
+            rhs = np.zeros(m + 1)
+            rhs[m] = 1.0
+            try:
+                beta = np.linalg.solve(a, rhs)[:m]
+            except np.linalg.LinAlgError:
+                beta = None
+            if beta is None or not np.all(np.isfinite(beta)):
+                mixed = rin + self.alpha * res
+            else:
+                mixed = beta @ (np.stack(self._rho_in)
+                                + self.alpha * r)
+        return jnp.asarray(mixed.astype(np.float32).reshape(rho_in.shape))
+
+
+# -------------------------------------------------------------------- config
+@dataclasses.dataclass
+class SCFConfig:
+    n: int = 16                       # FFT cube width
+    diameter: int | None = None       # sphere diameter (default n // 2)
+    nbands: int = 4
+    nocc: int | None = None           # occupied bands (default: all)
+    kpts: tuple = ((0.0, 0.0, 0.0),)  # reduced coords, units 2π/L
+    weights: tuple | None = None
+    L: float | None = None            # cell side (default n, spacing 1)
+    depth: float = 4.0                # Gaussian-well depth
+    xc: bool = True                   # include the LDA exchange term
+    max_iter: int = 50
+    e_tol: float = 1e-5               # |ΔE| convergence threshold
+    r_tol: float = 1e-4               # density-residual threshold (per elec)
+    inner_steps: int = 4              # band-update steps per k per outer it
+    mix_alpha: float = 0.7
+    mix_history: int = 5
+    mix_warmup: int = 2               # linear iterations before Anderson
+    seed: int = 0
+    policy: ExecPolicy | None = None
+    backend: str = "matmul"
+
+
+@dataclasses.dataclass
+class SCFResult:
+    converged: bool
+    iterations: int
+    energy: float
+    energies: list[float]             # total energy per outer iteration
+    residuals: list[float]            # |ρ_out − ρ_in| per electron
+    eigenvalues: np.ndarray           # (nk, nbands), ascending per k
+    rho: jnp.ndarray
+    transforms: int                   # per-band 3D transforms executed
+                                      # (plan calls batch nbands of them)
+    seconds: float
+    cache_stats: dict                 # global PlanCache counters (delta)
+
+    @property
+    def transforms_per_s(self) -> float:
+        return self.transforms / max(self.seconds, 1e-9)
+
+
+# -------------------------------------------------------------------- energy
+def total_energy(basis, coeffs, rho, v_ext, hartree: HartreeSolver, occ,
+                 *, xc: bool = True) -> tuple[float, dict]:
+    """E[{ψ}, ρ] and its components; ρ should be the orbitals' density."""
+    occ = np.asarray(occ, np.float64)
+    e_kin = 0.0
+    for ik, c in enumerate(coeffs):
+        kin = basis.kinetic(ik)
+        per_band = jnp.sum(kin[None, :] * jnp.abs(c) ** 2, axis=1)
+        e_kin += float(basis.weights[ik]
+                       * (occ[ik] @ np.asarray(per_band, np.float64)))
+    dv = basis.dv
+    e_ext = float(jnp.sum(rho * v_ext) * dv)
+    vh = hartree(rho)
+    e_h = hartree.energy(rho, vh)
+    if xc:
+        e_x, _ = lda_exchange(rho)
+        e_xc = float(jnp.sum(e_x) * dv)
+    else:
+        e_xc = 0.0
+    total = e_kin + e_ext + e_h + e_xc
+    return total, {"kinetic": e_kin, "external": e_ext, "hartree": e_h,
+                   "xc": e_xc, "total": total}
+
+
+# -------------------------------------------------------------------- driver
+def _init_coefficients(basis, seed: int):
+    rng = np.random.default_rng(seed)
+    coeffs = []
+    for ik in range(basis.nk):
+        npk = basis.npacked(ik)
+        c = (rng.standard_normal((basis.nbands, npk))
+             + 1j * rng.standard_normal((basis.nbands, npk))
+             ).astype(np.complex64)
+        coeffs.append(orthonormalize(jnp.asarray(c)))
+    return coeffs
+
+
+def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
+            v_ext=None, callback=None) -> SCFResult:
+    """Run the SCF loop; see module docstring for the iteration structure.
+
+    ``callback(it, energy, residual)`` is invoked after every outer
+    iteration (the example CLI uses it for progress lines).
+    """
+    basis = PlaneWaveBasis(
+        cfg.n, diameter=cfg.diameter, kpts=cfg.kpts, weights=cfg.weights,
+        nbands=cfg.nbands, L=cfg.L, grid=grid, policy=cfg.policy,
+        backend=cfg.backend)
+    cache0 = dict(global_plan_cache().stats)
+    if v_ext is None:
+        v_ext = jnp.asarray(gaussian_wells(cfg.n, depth=cfg.depth))
+    hartree = HartreeSolver(basis)
+
+    if cfg.inner_steps < 1:
+        raise ValueError(f"inner_steps must be >= 1, got {cfg.inner_steps}")
+    nocc = cfg.nbands if cfg.nocc is None else int(cfg.nocc)
+    if not 0 < nocc <= cfg.nbands:
+        raise ValueError(f"nocc {nocc} not in (0, nbands={cfg.nbands}]")
+    occ = np.zeros((basis.nk, basis.nbands))
+    occ[:, :nocc] = 1.0
+    nelec = float(basis.weights.sum() * nocc)
+
+    coeffs = _init_coefficients(basis, cfg.seed)
+    rho = density_from_orbitals(basis, coeffs, occ)
+    mixer = AndersonMixer(cfg.mix_alpha, cfg.mix_history, cfg.mix_warmup) \
+        if cfg.mix_history > 1 else LinearMixer(cfg.mix_alpha)
+
+    energies: list[float] = []
+    residuals: list[float] = []
+    eigs = np.zeros((basis.nk, basis.nbands))
+    # counter and timer both cover the SCF loop only: the warm-up density
+    # build above (plan construction + first traces) is excluded from both
+    transforms = 0
+    converged = False
+    t0 = time.perf_counter()
+
+    for it in range(cfg.max_iter):
+        vh = hartree(rho)
+        transforms += 2                            # cube fwd + derived inv
+        v_eff = v_ext + vh
+        if cfg.xc:
+            _, v_x = lda_exchange(rho)
+            v_eff = v_eff + v_x
+        for ik in range(basis.nk):
+            coeffs[ik], eps, napply = update_bands(
+                basis, ik, coeffs[ik], v_eff, steps=cfg.inner_steps)
+            eigs[ik] = np.asarray(eps)
+            transforms += napply * 2 * basis.nbands
+        rho_out = density_from_orbitals(basis, coeffs, occ)
+        transforms += basis.nk * basis.nbands
+        energy, _ = total_energy(basis, coeffs, rho_out, v_ext, hartree,
+                                 occ, xc=cfg.xc)
+        transforms += 2                            # energy's Hartree solve
+        resid = float(jnp.linalg.norm(rho_out - rho)
+                      * basis.dv ** 0.5) / max(nelec, 1e-9)
+        energies.append(energy)
+        residuals.append(resid)
+        if callback is not None:
+            callback(it, energy, resid)
+        if (it > cfg.mix_warmup
+                and abs(energies[-1] - energies[-2]) < cfg.e_tol
+                and resid < cfg.r_tol):
+            converged = True
+            break
+        rho = mixer.mix(rho, rho_out)
+
+    seconds = time.perf_counter() - t0
+    cache1 = global_plan_cache().stats
+    delta = {k: cache1[k] - cache0.get(k, 0)
+             for k in ("hits", "misses", "evictions")}
+    delta["size"] = cache1["size"]
+    # return the density the orbitals actually produced (not the mixed
+    # guess) — coeffs are unchanged since the loop's last rho_out
+    rho = rho_out if energies else density_from_orbitals(basis, coeffs, occ)
+    assert abs(electron_count(basis, rho) - nelec) < 1e-3 * max(nelec, 1.0)
+    return SCFResult(
+        converged=converged, iterations=len(energies),
+        energy=energies[-1] if energies else float("nan"),
+        energies=energies, residuals=residuals, eigenvalues=eigs, rho=rho,
+        transforms=transforms, seconds=seconds, cache_stats=delta)

@@ -1,0 +1,195 @@
+"""repro.dft: multi-sphere k-point batches, G-space Hartree, SCF loop."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (FftPlan, PlaneWaveFFT, ProcGrid, SphereDomain,
+                        global_plan_cache)
+from repro.dft import (HartreeSolver, PlaneWaveBasis, SCFConfig,
+                       density_from_orbitals, run_scf)
+from repro.dft.density import electron_count
+from repro.dft.hamiltonian import apply_hamiltonian, orthonormalize
+from repro.dft.scf import AndersonMixer
+
+KPTS2 = ((0.0, 0.0, 0.0), (0.5, 0.5, 0.5))
+
+
+@pytest.fixture(scope="module")
+def g1():
+    return ProcGrid.create([1], ["dft_g"])
+
+
+@pytest.fixture(scope="module")
+def basis2(g1):
+    return PlaneWaveBasis(16, kpts=KPTS2, nbands=3, grid=g1)
+
+
+def _rand_bands(rng, nb, npk):
+    c = (rng.standard_normal((nb, npk))
+         + 1j * rng.standard_normal((nb, npk))).astype(np.complex64)
+    return orthonormalize(jnp.asarray(c))
+
+
+# -------------------------------------------------------------------- basis
+def test_basis_builds_one_sphere_per_kpoint(basis2):
+    s0, s1 = basis2.spheres
+    assert isinstance(s0, SphereDomain) and isinstance(s1, SphereDomain)
+    assert s0.center != s1.center          # k shifts the sphere center
+    assert s0.extents == s1.extents == (8, 8, 8)   # shared bounding box
+    assert basis2.npacked(0) != basis2.npacked(1)  # different point sets
+
+
+def test_basis_kinetic_matches_cutoff_rule(basis2):
+    for ik in range(basis2.nk):
+        kin = np.asarray(basis2.kinetic(ik))
+        g = basis2.gvectors(ik)
+        ref = 0.5 * (g ** 2).sum(1) * (2 * np.pi / basis2.L) ** 2
+        np.testing.assert_allclose(kin, ref, rtol=1e-6)
+        # cut-off rule: every packed wave is inside the kinetic sphere
+        e_cut = 0.5 * (2 * np.pi * basis2.d / (2 * basis2.L)) ** 2
+        assert kin.max() <= e_cut + 1e-6
+
+
+def test_basis_distinct_spheres_distinct_plans_repeats_hit(basis2):
+    cache = global_plan_cache()
+    inv0, fwd0 = basis2.plans_for_k(0)
+    inv1, _ = basis2.plans_for_k(1)
+    assert isinstance(inv0, PlaneWaveFFT)
+    assert inv0 is not inv1                # distinct spheres → distinct plans
+    assert inv0.sphere is basis2.spheres[0]
+    hits = cache.stats["hits"]
+    inv0b, fwd0b = basis2.plans_for_k(0)   # re-request: plan-cache hit
+    assert inv0b is inv0 and fwd0b is fwd0
+    assert cache.stats["hits"] == hits + 1
+
+
+# ------------------------------------------------------------------ hartree
+def test_hartree_matches_numpy_reference(basis2):
+    rng = np.random.default_rng(0)
+    rho = rng.random((16, 16, 16)).astype(np.float32)
+    vh = np.asarray(HartreeSolver(basis2)(jnp.asarray(rho)))
+    f = np.fft.fftfreq(16, d=1.0 / 16)
+    gx, gy, gz = np.meshgrid(f, f, f, indexing="ij")
+    g2 = (gx ** 2 + gy ** 2 + gz ** 2) * (2 * np.pi / basis2.L) ** 2
+    kern = np.where(g2 > 0, 4 * np.pi / np.where(g2 > 0, g2, 1.0), 0.0)
+    ref = np.real(np.fft.ifftn(np.fft.fftn(rho) * kern))
+    np.testing.assert_allclose(vh, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_hartree_runs_on_full_cube_plan_pair(basis2):
+    fwd, inv = basis2.cube_plans()
+    assert isinstance(fwd, FftPlan) and not isinstance(fwd, PlaneWaveFFT)
+    assert isinstance(inv, FftPlan) and not isinstance(inv, PlaneWaveFFT)
+    assert fwd.tin.shape == (16, 16, 16)
+    searches = FftPlan.searches
+    fwd2, inv2 = basis2.cube_plans()       # cached + derived: no re-search
+    assert fwd2 is fwd and inv2 is inv
+    assert FftPlan.searches == searches
+
+
+# ------------------------------------------------------------------ density
+def test_density_integrates_to_electron_count(basis2):
+    rng = np.random.default_rng(1)
+    coeffs = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    occ = np.ones((basis2.nk, basis2.nbands))
+    rho = density_from_orbitals(basis2, coeffs, occ)
+    assert float(rho.min()) >= 0.0
+    assert abs(electron_count(basis2, rho) - basis2.nbands) < 1e-3
+
+
+def test_hamiltonian_is_hermitian(basis2):
+    rng = np.random.default_rng(2)
+    npk = basis2.npacked(0)
+    c1 = _rand_bands(rng, basis2.nbands, npk)
+    c2 = _rand_bands(rng, basis2.nbands, npk)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    h1 = apply_hamiltonian(basis2, 0, c1, v)
+    h2 = apply_hamiltonian(basis2, 0, c2, v)
+    lhs = complex(jnp.vdot(c2, h1))        # ⟨c2|H c1⟩
+    rhs = complex(jnp.vdot(h2, c1))        # ⟨H c2|c1⟩
+    assert abs(lhs - rhs) < 1e-3 * max(abs(lhs), 1.0)
+
+
+# ------------------------------------------------------------------- mixing
+def test_anderson_mixer_fixed_point_and_history():
+    mixer = AndersonMixer(alpha=0.5, history=3, warmup=1)
+    rho = jnp.ones((4, 4, 4))
+    for _ in range(5):
+        out = mixer.mix(rho, rho)          # already self-consistent
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rho), atol=1e-6)
+    assert len(mixer._res) == 3            # history is trimmed
+
+
+def test_anderson_beats_linear_on_a_linear_model():
+    """ρ* = A ρ + b: Anderson reaches the fixed point faster than linear."""
+    rng = np.random.default_rng(3)
+    a = 0.9 * np.eye(8) + 0.05 * rng.standard_normal((8, 8))
+    b = rng.standard_normal(8)
+
+    def residual_after(mixer, iters):
+        rho = jnp.zeros((8, 1, 1))
+        for _ in range(iters):
+            out = jnp.asarray((a @ np.asarray(rho).ravel() + b
+                               ).reshape(8, 1, 1))
+            rho = mixer.mix(rho, out)
+        return float(jnp.linalg.norm(
+            jnp.asarray(a @ np.asarray(rho).ravel() + b).reshape(8, 1, 1)
+            - rho))
+
+    lin = residual_after(AndersonMixer(0.5, history=1, warmup=99), 12)
+    and_ = residual_after(AndersonMixer(0.5, history=6, warmup=2), 12)
+    assert and_ < lin * 0.5
+
+
+# ---------------------------------------------------------------------- SCF
+def test_scf_converges_two_kpoints_multi_band():
+    """Acceptance: 2 k-points × 4 bands converges, energy monotone after
+    the mixing warm-up, per-k sphere plans served from the PlanCache, and
+    the Hartree term computed via the full-cube plan pair.
+
+    Runs on however many devices the process sees — 1 in the default CI
+    job, 4 in the multi-device job (XLA_FLAGS forced device count)."""
+    import jax
+    grid = ProcGrid.create([jax.device_count()],
+                           ["dft_scf"])        # fresh axis → cold plans
+    cache = global_plan_cache()
+    misses0 = cache.stats["misses"]
+    cfg = SCFConfig(n=16, nbands=4, kpts=KPTS2, max_iter=50)
+    res = run_scf(cfg, grid=grid)
+    assert res.converged, (res.energies, res.residuals)
+    de = abs(res.energies[-1] - res.energies[-2])
+    assert de < cfg.e_tol
+    # monotone decrease once mixing has warmed up (small f32 slack)
+    tail = res.energies[cfg.mix_warmup + 1:]
+    assert all(b <= a + 2e-5 for a, b in zip(tail, tail[1:])), tail
+    # 2 distinct sphere plans + 1 cube plan built, everything else hits
+    assert cache.stats["misses"] == misses0 + 3
+    assert res.cache_stats["hits"] > 10 * res.cache_stats["misses"]
+    # eigenvalues come out sorted per k
+    for eps in res.eigenvalues:
+        assert np.all(np.diff(eps) >= -1e-6)
+    # both wells bind: lowest two bands are split by less than well depth
+    assert res.energy < 0.0
+    assert res.transforms > 100
+
+
+def test_scf_distributed_4dev(dist):
+    """Acceptance: same problem on 4 simulated devices — sphere plans from
+    the cache, cube pair for Hartree, convergence to the 1-device energy."""
+    script = """
+from repro.core import global_plan_cache
+from repro.dft import SCFConfig, run_scf
+import jax
+assert jax.device_count() == 4
+cfg = SCFConfig(n=16, nbands=4, kpts=((0,0,0),(0.5,0.5,0.5)), max_iter=50)
+res = run_scf(cfg)
+assert res.converged, res.energies
+assert res.cache_stats["misses"] == 3      # 2 spheres + 1 cube
+assert res.cache_stats["hits"] >= 1        # repeated spheres hit the cache
+assert abs(res.energy - (-1.9197)) < 5e-3, res.energy
+print("OK", res.iterations, round(res.energy, 5))
+"""
+    out = dist(script, n_devices=4)
+    assert "OK" in out

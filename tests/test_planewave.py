@@ -87,7 +87,8 @@ def test_forward_truncation(sph16):
          + 1j * rng.standard_normal((2, n, n, n))).astype(np.complex64)
     y = np.asarray(fwd(jnp.asarray(x)))
     ref = np.fft.fftn(x, axes=(1, 2, 3))[:, :16, :16, :16]
-    np.testing.assert_allclose(y, ref, rtol=3e-4, atol=3e-3 * np.abs(ref).max())
+    np.testing.assert_allclose(y, ref, rtol=3e-4,
+                               atol=3e-3 * np.abs(ref).max())
 
 
 def test_roundtrip_identity_on_sphere(sph16):
@@ -101,6 +102,20 @@ def test_roundtrip_identity_on_sphere(sph16):
     rt = fwd(inv(cube))
     got = np.asarray(inv.pack(inv.mask_cube(rt)))
     np.testing.assert_allclose(got, packed, rtol=1e-3, atol=2e-5)
+
+
+def test_from_tensors_without_sphere_raises_value_error():
+    """A plan request whose packed side has no SphereDomain must fail with
+    a clear ValueError (used to escape as a bare StopIteration)."""
+    from repro.core import Domain, DistTensor, PlaneWaveFFT
+    g = ProcGrid.create([1])
+    b = Domain((0,), (1,))
+    cube = Domain((0, 0, 0), (7, 7, 7))
+    ti = DistTensor.create((b, cube), "b x y z", g)
+    to = DistTensor.create((b, cube), "b X Y Z", g)
+    with pytest.raises(ValueError, match="SphereDomain"):
+        PlaneWaveFFT.from_tensors((8, 8, 8), to, ("X", "Y", "Z"),
+                                  ti, ("x", "y", "z"), g, inverse=True)
 
 
 def test_staged_moves_less_data_than_padded():
@@ -145,7 +160,8 @@ n = 32
 sph = SphereDomain.from_diameter(16)
 inv, fwd = make_planewave_pair(g, n, sph, 4)
 rng = np.random.default_rng(1)
-packed = (rng.standard_normal((4, sph.npacked)) + 1j*rng.standard_normal((4, sph.npacked))).astype(np.complex64)
+packed = (rng.standard_normal((4, sph.npacked))
+          + 1j*rng.standard_normal((4, sph.npacked))).astype(np.complex64)
 cube = np.asarray(inv.unpack(jnp.asarray(packed)))
 full = np.zeros((4, n, n, n), np.complex64); full[:, :16, :16, :16] = cube
 ref = np.fft.ifftn(full, axes=(1,2,3))
@@ -166,7 +182,8 @@ n = 32
 sph = SphereDomain.from_diameter(16)
 inv, fwd = make_planewave_pair(g, n, sph, 4, batch_axes=(0,), fft_axes=(1,))
 rng = np.random.default_rng(1)
-packed = (rng.standard_normal((4, sph.npacked)) + 1j*rng.standard_normal((4, sph.npacked))).astype(np.complex64)
+packed = (rng.standard_normal((4, sph.npacked))
+          + 1j*rng.standard_normal((4, sph.npacked))).astype(np.complex64)
 cube = np.asarray(inv.unpack(jnp.asarray(packed)))
 full = np.zeros((4, n, n, n), np.complex64); full[:, :16, :16, :16] = cube
 ref = np.fft.ifftn(full, axes=(1,2,3))

@@ -142,6 +142,8 @@ def test_double_inverse_is_original_transform(g1):
     dom = Domain((0, 0, 0), (7, 7, 7))
     plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
     again = plan.inverse().inverse()
+    assert again is plan               # memoized + back-linked
+    assert plan.inverse() is plan.inverse()
     rng = np.random.default_rng(5)
     x = _rand_c64(rng, (8, 8, 8))
     np.testing.assert_allclose(np.asarray(again(jnp.asarray(x))),
@@ -198,6 +200,47 @@ def test_planewave_derived_forward_accounting(g1):
     assert fwd.flop_count() == inv.flop_count()
     assert sum(s["bytes_per_device"] for s in fwd.comm_stats()) == \
         sum(s["bytes_per_device"] for s in inv.comm_stats())
+
+
+def test_planewave_adjoint_inner_product_identity(g1):
+    """⟨F x, y⟩ == ⟨x, F† y⟩ for both members of a plane-wave pair."""
+    from repro.core import make_planewave_pair
+    sph = SphereDomain.from_diameter(8)
+    inv, fwd = make_planewave_pair(g1, 16, sph, 2)
+    before = FftPlan.searches
+    adj_inv = inv.adjoint()
+    adj_fwd = fwd.adjoint()
+    assert FftPlan.searches == before, "adjoint() ran a schedule search"
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(_rand_c64(rng, (2, 8, 8, 8)))      # sphere cube side
+    y = jnp.asarray(_rand_c64(rng, (2, 16, 16, 16)))   # real-space side
+    lhs = np.vdot(np.asarray(inv(x)), np.asarray(y))
+    rhs = np.vdot(np.asarray(x), np.asarray(adj_inv(y)))
+    assert abs(lhs - rhs) / abs(lhs) < 1e-4
+    lhs = np.vdot(np.asarray(fwd(y)), np.asarray(x))
+    rhs = np.vdot(np.asarray(y), np.asarray(adj_fwd(x)))
+    assert abs(lhs - rhs) / abs(lhs) < 1e-4
+
+
+def test_plan_cache_multi_sphere_kpoints(g1):
+    """k-points with distinct spheres build distinct plans; a repeated
+    k-point is a cache hit — the repro.dft multi-sphere traffic pattern."""
+    cache = PlanCache()
+    b = Domain((0,), (1,))
+    kpts = [(0.0, 0.0, 0.0), (0.5, 0.5, 0.5), (0.0, 0.0, 0.0)]
+    plans = []
+    for kp in kpts:
+        sph = SphereDomain(radius=4.0,
+                           center=tuple(3.5 + k for k in kp),
+                           lower=(0, 0, 0), upper=(7, 7, 7))
+        plans.append(fftb.plan_for(
+            "b x{0} y z -> b X Y Z{0}", domains=(b, sph), grid=g1,
+            sizes=(16, 16, 16), inverse=True, cache=cache))
+    assert plans[0] is not plans[1]        # distinct spheres, distinct plans
+    assert plans[2] is plans[0]            # repeated k-point hits the cache
+    assert cache.stats["misses"] == 2
+    assert cache.stats["hits"] == 1
+    assert plans[0].sphere.npacked != plans[1].sphere.npacked
 
 
 def test_build_rejects_sizes_conflicting_with_out_domains(g1):
@@ -276,6 +319,18 @@ def test_tune_pins_fastest_policy(g1):
     ref = np.fft.fftn(np.asarray(x))
     rel = np.abs(np.asarray(plan(x)) - ref).max() / np.abs(ref).max()
     assert rel < 3e-2, rel              # winner may be the bf16 executor
+
+
+def test_tune_syncs_memoized_mirror(g1):
+    """tune() re-pins the policy on already-derived mirrors too."""
+    dom = Domain((0, 0, 0), (15, 15, 15))
+    plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
+    inv = plan.inverse()               # derived before tuning
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(_rand_c64(rng, (16, 16, 16)))
+    best = plan.tune(x, warmup=1, iters=1)
+    assert plan.inverse() is inv       # still the memoized object
+    assert inv.policy == best          # ... with the tuned policy
 
 
 # -------------------------------------------------------------- PlanCache
