@@ -1,0 +1,116 @@
+"""Perf-trajectory gate: compare a BENCH_scf.json against the baseline.
+
+CI's bench-trajectory job runs the SCF scenarios (1D and 2D grids), uploads
+the fresh ``BENCH_scf.json`` as an artifact, then runs this module against
+the committed ``benchmarks/baseline.json``:
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_scf.json \\
+        benchmarks/baseline.json --tolerance 0.20
+
+Exit 1 when any scenario's ``transforms_per_s`` regressed more than the
+tolerance, when a baseline scenario disappeared from the current run, or
+when a scenario stopped converging — a silently dropped scenario must not
+read as a pass.  Scenario configs (devices, quick flag, grid shape) are
+checked too: comparing numbers measured under different configurations is
+reported as an error, not a pass.
+
+Refresh the baseline after an intentional perf change with::
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_scf.json \\
+        benchmarks/baseline.json --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_scenarios(path: str) -> dict:
+    with open(path) as f:
+        record = json.load(f)
+    if not isinstance(record, dict) or "scenarios" not in record:
+        raise SystemExit(
+            f"{path}: not a schema-2 BENCH_scf.json (missing 'scenarios'); "
+            "regenerate with benchmarks/run.py")
+    return record["scenarios"]
+
+
+def compare_records(current: dict, baseline: dict,
+                    tolerance: float = 0.20) -> list[str]:
+    """Return the list of gate failures (empty = pass)."""
+    failures: list[str] = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            failures.append(
+                f"{name}: scenario present in baseline but missing from "
+                "the current run")
+            continue
+        for key in ("grid_shape", "scenario"):
+            if cur.get(key) != base.get(key):
+                failures.append(
+                    f"{name}: {key} changed ({base.get(key)} -> "
+                    f"{cur.get(key)}); refresh the baseline instead of "
+                    "comparing different configurations")
+        if not cur.get("converged", False):
+            failures.append(f"{name}: SCF did not converge")
+        base_tps = float(base["transforms_per_s"])
+        cur_tps = float(cur["transforms_per_s"])
+        floor = base_tps * (1.0 - tolerance)
+        if cur_tps < floor:
+            failures.append(
+                f"{name}: transforms/s regressed {base_tps:.1f} -> "
+                f"{cur_tps:.1f} ({cur_tps / base_tps - 1.0:+.1%}, "
+                f"tolerance -{tolerance:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_scf.json")
+    ap.add_argument("baseline", help="committed benchmarks/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional transforms/s drop "
+                         "(default 0.20)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the current record "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+
+    current = load_scenarios(args.current)
+    if args.update_baseline:
+        with open(args.current) as f:
+            record = json.load(f)
+        with open(args.baseline, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"baseline {args.baseline} updated from {args.current} "
+              f"(scenarios: {', '.join(sorted(current))})")
+        return 0
+
+    baseline = load_scenarios(args.baseline)
+    for name in sorted(set(current) | set(baseline)):
+        cur, base = current.get(name), baseline.get(name)
+        cur_s = f"{cur['transforms_per_s']:.1f}" if cur else "—"
+        base_s = f"{base['transforms_per_s']:.1f}" if base else "—"
+        grid = (cur or base).get("grid_shape")
+        print(f"{name:10s} grid={grid!s:8s} transforms/s "
+              f"baseline={base_s:>8s} current={cur_s:>8s}")
+    failures = compare_records(current, baseline, args.tolerance)
+    if failures:
+        print("\nPERF GATE FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        print("\nIf this is machine/runner drift rather than a code "
+              "regression, refresh the baseline from a trusted run's "
+              "BENCH_scf.json artifact:\n  python -m benchmarks.compare "
+              "<artifact> benchmarks/baseline.json --update-baseline")
+        return 1
+    print(f"\nperf gate passed (tolerance -{args.tolerance:.0%}, "
+          f"{len(baseline)} scenario(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

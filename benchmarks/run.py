@@ -10,19 +10,31 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * train/decode_step   — reduced-config step microbenches (measured, CPU)
 
 ``derived`` column: modeled ms for fig9 rows, speedup/ratios elsewhere.
-The SCF scenario additionally writes machine-readable ``BENCH_scf.json``
-(transforms/s, iterations to convergence, plan-cache hit rate) so the perf
-trajectory can be tracked across commits.
+The SCF scenarios (``scf`` on a 1D fft grid, ``scf-2d`` on a batch×fft 2D
+grid — both recording their grid shape) additionally write machine-readable
+``BENCH_scf.json`` (transforms/s, iterations to convergence, plan-cache hit
+rate) so the perf trajectory can be tracked across commits; CI's
+bench-trajectory job uploads it and gates regressions against
+``benchmarks/baseline.json`` via ``benchmarks/compare.py``.  The JSON is
+written atomically (temp file + rename) so an interrupted run can't leave a
+truncated artifact.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
+         [--scenarios scf,scf-2d]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import tempfile
 import time
 
 import numpy as np
+
+#: selectable benchmark scenarios (--scenarios comma list, default all)
+SCENARIOS = ("table1", "plan_cache", "local_fft", "planewave", "fig9",
+             "scf", "scf-2d", "steps")
 
 
 def _timeit(fn, *args, warmup=2, iters=5):
@@ -218,37 +230,48 @@ def bench_fig9(rows):
                              round(_fig9_time(inv.plan), 3)))
 
 
-def bench_scf(rows, quick=False):
+def bench_scf(rows, quick=False, grid_shape=None, tag="scf"):
     """repro.dft SCF scenario — the paper's end-to-end workload.
 
     Two k-points (two distinct sphere plans) + the full-cube Hartree pair,
-    mixing-driven SCF.  Returns the machine-readable record written to
-    BENCH_scf.json.
+    mixing-driven SCF, on a 1D fft-only grid (``tag='scf'``) or a 2D
+    batch×fft grid (``tag='scf-2d'``, grid_shape e.g. (2, 2) — bands shard
+    the batch axis, the density stacks k-points into it).  Returns the
+    machine-readable record merged into BENCH_scf.json; ``grid_shape`` in
+    the record is what the trajectory gate keys scenarios by.
     """
     import jax
-    from repro.core import global_plan_cache
+    from repro.core import ProcGrid, global_plan_cache
     from repro.dft import SCFConfig, run_scf
+    if grid_shape is None:
+        grid_shape = (jax.device_count(),)
+    grid_shape = tuple(grid_shape)
+    names = ("dft_b", "dft_f")[-len(grid_shape):]
+    grid = ProcGrid.create(list(grid_shape), list(names))
     cfg = SCFConfig(n=16, nbands=4, kpts=((0, 0, 0), (0.5, 0.5, 0.5)),
                     max_iter=20 if quick else 50,
                     e_tol=1e-4 if quick else 1e-5,
                     r_tol=1e-3 if quick else 1e-4)
     global_plan_cache().clear()
-    res = run_scf(cfg)
+    res = run_scf(cfg, grid=grid)
     c = res.cache_stats
     lookups = c["hits"] + c["misses"]
     hit_rate = c["hits"] / max(lookups, 1)
-    rows.append(("scf_outer_iteration",
+    label = tag.replace("-", "_")
+    rows.append((f"{label}_outer_iteration",
                  res.seconds / max(res.iterations, 1) * 1e6,
                  res.iterations))
-    rows.append(("scf_transforms_per_s", 0.0,
+    rows.append((f"{label}_transforms_per_s", 0.0,
                  round(res.transforms_per_s, 1)))
-    rows.append(("scf_cache_hit_rate", 0.0, round(hit_rate, 4)))
+    rows.append((f"{label}_cache_hit_rate", 0.0, round(hit_rate, 4)))
     return {
         "scenario": {
             "n": cfg.n, "nbands": cfg.nbands, "kpts": list(cfg.kpts),
             "max_iter": cfg.max_iter, "e_tol": cfg.e_tol,
             "devices": jax.device_count(), "quick": bool(quick),
         },
+        "grid_shape": list(grid_shape),
+        "pipeline": bool(cfg.pipeline),
         "converged": bool(res.converged),
         "scf_iterations": res.iterations,
         "total_energy": res.energy,
@@ -289,28 +312,115 @@ def bench_steps(rows):
     rows.append(("decode_step_reduced", us, round(4 / (us * 1e-6), 0)))
 
 
+def atomic_json_dump(record, path: str) -> None:
+    """Write JSON via a temp file + atomic rename.
+
+    An interrupted benchmark run (CI timeout, OOM-kill) must not leave a
+    truncated ``BENCH_scf.json`` behind — the artifact either has the old
+    complete contents or the new complete contents, never half of one.
+    """
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+#: the fixed SCF scenario shape (bench_scf's SCFConfig) — the 2D split
+#: must divide these or PlaneWaveBasis rejects the grid
+SCF_NBANDS = 4
+SCF_DIAMETER = 8
+SCF_NK = 2
+
+
+def scf_2d_grid_shape(ndevices: int) -> tuple[int, int] | None:
+    """(batch, fft) split for the scf-2d scenario, None when infeasible.
+
+    Delegates to ``repro.sharding.grids.choose_dft_grid_shape`` — the same
+    policy ``--grid auto`` gives users — so the benchmark measures a grid
+    the product code would actually pick.  None (skip the scenario, don't
+    abort the run) when the chooser stays 1D: fewer than 4 devices, or no
+    split dividing the scenario's band count / sphere diameter.
+    """
+    from repro.sharding.grids import choose_dft_grid_shape
+    if ndevices < 4:
+        return None
+    shape = choose_dft_grid_shape(ndevices, nbands=SCF_NBANDS,
+                                  diameter=SCF_DIAMETER, nk=SCF_NK)
+    return shape if len(shape) == 2 else None
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json-out", default="BENCH_scf.json",
                     help="path for the machine-readable SCF record")
+    ap.add_argument("--scenarios", default="all",
+                    help="comma list from %s (default: all)"
+                         % ",".join(SCENARIOS))
     args = ap.parse_args(argv)
+    if args.scenarios == "all":
+        wanted = set(SCENARIOS)
+    else:
+        wanted = {s.strip() for s in args.scenarios.split(",") if s.strip()}
+        bad = wanted - set(SCENARIOS)
+        if bad:
+            ap.error(f"unknown scenarios {sorted(bad)}; "
+                     f"choose from {SCENARIOS}")
     rows: list[tuple[str, float, object]] = []
-    bench_table1(rows)
-    bench_plan_cache(rows)
-    bench_local_fft(rows, args.quick)
-    bench_planewave(rows, args.quick)
-    bench_fig9(rows)
-    scf_record = bench_scf(rows, args.quick)
-    if not args.quick:
-        bench_steps(rows)
+    scf_records: dict[str, dict] = {}
+    if "table1" in wanted:
+        bench_table1(rows)
+    if "plan_cache" in wanted:
+        bench_plan_cache(rows)
+    if "local_fft" in wanted:
+        bench_local_fft(rows, args.quick)
+    if "planewave" in wanted:
+        bench_planewave(rows, args.quick)
+    if "fig9" in wanted:
+        bench_fig9(rows)
+    if "scf" in wanted:
+        scf_records["scf"] = bench_scf(rows, args.quick, tag="scf")
+    if "scf-2d" in wanted:
+        import jax
+        shape = scf_2d_grid_shape(jax.device_count())
+        if shape is None:
+            print(f"# scf-2d skipped: no feasible batch×fft split for "
+                  f"{jax.device_count()} device(s) — needs >= 4 with the "
+                  f"batch factor dividing nbands={SCF_NBANDS} and the fft "
+                  f"factor dividing d={SCF_DIAMETER} "
+                  "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        else:
+            scf_records["scf-2d"] = bench_scf(
+                rows, args.quick, grid_shape=shape, tag="scf-2d")
+    if "steps" in wanted:
+        # --quick drops steps from the default "all" sweep, but an
+        # explicitly requested scenario always runs
+        if args.scenarios != "all":
+            bench_steps(rows)
+        elif not args.quick:
+            bench_steps(rows)
+        else:
+            print("# steps skipped under --quick (request it explicitly "
+                  "with --scenarios steps to run anyway)")
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    with open(args.json_out, "w") as f:
-        json.dump(scf_record, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {args.json_out}")
+    if scf_records:
+        atomic_json_dump({"schema": 2, "scenarios": scf_records},
+                         args.json_out)
+        print(f"# wrote {args.json_out} "
+              f"(scenarios: {', '.join(scf_records)})")
 
 
 if __name__ == '__main__':

@@ -7,19 +7,37 @@ plan per sphere served from the process-global PlanCache) interleaved with
 full-cube density/potential transforms for the G-space Hartree solve.
 
 Run:  PYTHONPATH=src python examples/planewave_dft.py \\
-          [--n 16] [--bands 4] [--kpts "0,0,0;0.5,0.5,0.5"]
-      (XLA_FLAGS=--xla_force_host_platform_device_count=4 to distribute)
+          [--n 16] [--bands 4] [--kpts "0,0,0;0.5,0.5,0.5"] [--grid 2x2]
+      (XLA_FLAGS=--xla_force_host_platform_device_count=4 to distribute;
+       --grid auto picks 1D fft vs 2D batch×fft from the problem shape)
 """
 import argparse
 
-from repro.core import ExecPolicy, global_plan_cache
+from repro.core import ExecPolicy, ProcGrid, global_plan_cache
 from repro.dft import SCFConfig, run_scf
+from repro.sharding.grids import DFT_AXES_1D, DFT_AXES_2D, choose_dft_grid
 
 
 def parse_kpts(spec: str):
     """'0,0,0;0.5,0.5,0.5' → ((0,0,0), (0.5,0.5,0.5))."""
     return tuple(tuple(float(x) for x in part.split(","))
                  for part in spec.split(";") if part.strip())
+
+
+def parse_grid(spec: str, cfg: SCFConfig):
+    """'auto' | '4' | '2x2' | '2x2x2' … → ProcGrid (leading axes batch,
+    last axis fft — the PlaneWaveBasis convention for any rank)."""
+    if spec == "auto":
+        return choose_dft_grid(nbands=cfg.nbands, nk=len(cfg.kpts),
+                               diameter=cfg.diameter or cfg.n // 2)
+    shape = [int(p) for p in spec.lower().split("x")]
+    if len(shape) == 1:
+        names = list(DFT_AXES_1D)
+    elif len(shape) == 2:
+        names = list(DFT_AXES_2D)
+    else:
+        names = [f"dft_b{i}" for i in range(len(shape) - 1)] + ["dft_f"]
+    return ProcGrid.create(shape, names)
 
 
 def main(argv=None):
@@ -40,6 +58,12 @@ def main(argv=None):
     ap.add_argument("--policy", default="eager",
                     choices=["eager", "lazy", "lazy_bf16"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grid", default="auto",
+                    help="processing grid: 'auto', '4' (1D fft), or "
+                         "'2x2' (batch×fft 2D)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="serial per-k loop instead of the double-buffered "
+                         "k-point pipeline")
     args = ap.parse_args(argv)
 
     cfg = SCFConfig(
@@ -47,17 +71,19 @@ def main(argv=None):
         kpts=parse_kpts(args.kpts), max_iter=args.iters, e_tol=args.tol,
         inner_steps=args.inner_steps, mix_alpha=args.mix_alpha,
         depth=args.depth, xc=not args.no_xc, seed=args.seed,
+        pipeline=not args.no_pipeline,
         policy=ExecPolicy.from_mode(args.policy))
+    grid = parse_grid(args.grid, cfg)
 
     import jax
-    print(f"devices={jax.device_count()}  n={cfg.n}  bands={cfg.nbands}  "
-          f"k-points={len(cfg.kpts)}")
+    print(f"devices={jax.device_count()}  grid={grid}  n={cfg.n}  "
+          f"bands={cfg.nbands}  k-points={len(cfg.kpts)}")
 
     def progress(it, e, r):
         if it % 5 == 0:
             print(f"iter {it:3d}  E = {e:+.7f}  |Δρ| = {r:.3e}")
 
-    res = run_scf(cfg, callback=progress)
+    res = run_scf(cfg, grid=grid, callback=progress)
 
     print(f"\n{'converged' if res.converged else 'NOT converged'} in "
           f"{res.iterations} iterations:  E = {res.energy:+.7f}")

@@ -9,7 +9,8 @@ from .fft import Transform, fftb
 from .grid import ProcGrid
 from .local_fft import dft_matrix, local_dft
 from .plan import FftPlan, Plan
-from .planewave import PlaneWaveFFT, make_planewave_pair
+from .planewave import (PlaneWaveFFT, cube_spec, make_planewave_pair,
+                        planewave_spec)
 from .policy import ExecPolicy
 from .spectral import fft_conv, fourier_mixer
 
@@ -17,6 +18,7 @@ __all__ = [
     "Domain", "SphereDomain", "sphere_for_cutoff", "DistTensor",
     "parse_dims", "parse_transform_spec", "dims_string", "Transform",
     "fftb", "ProcGrid", "dft_matrix", "local_dft", "Plan", "FftPlan",
-    "PlaneWaveFFT", "make_planewave_pair", "ExecPolicy", "PlanCache",
+    "PlaneWaveFFT", "make_planewave_pair", "planewave_spec", "cube_spec",
+    "ExecPolicy", "PlanCache",
     "global_plan_cache", "fft_conv", "fourier_mixer",
 ]

@@ -1,4 +1,4 @@
-"""Process-global LRU plan cache.
+"""Process-global LRU plan cache, eviction weighed by resident bytes.
 
 Schedule search + index-table construction make plan building the expensive
 step of every FFTB transform, and model/serving code tends to request the
@@ -8,9 +8,14 @@ step).  ``PlanCache`` memoizes built plans behind a hashable key of
 through the process-global instance so callers never rebuild a plan for a
 transform they have already used.
 
-Thread-safe; eviction is LRU.  Builders run outside the lock (they can take
-seconds), so two threads racing on the same cold key may both build — the
-cache stays consistent, one of the two plans wins.
+Eviction is LRU on *estimated bytes* (``plan.estimated_bytes()``), not on
+entry count: a large-n plane-wave plan pins megabytes of sphere index
+tables while a tiny cube plan is nearly free, so counting entries evicts
+the wrong things.  ``maxsize`` remains as a hard entry-count ceiling.
+
+Thread-safe.  Builders run outside the lock (they can take seconds), so two
+threads racing on the same cold key may both build — the cache stays
+consistent, one of the two plans wins.
 """
 from __future__ import annotations
 
@@ -20,15 +25,29 @@ from collections import OrderedDict
 from .domain import Domain, SphereDomain
 from .grid import ProcGrid
 
+#: fallback cost for objects without ``estimated_bytes`` (test doubles)
+_DEFAULT_ENTRY_BYTES = 4096
+
+
+def _entry_bytes(plan) -> int:
+    try:
+        return max(int(plan.estimated_bytes()), 1)
+    except Exception:
+        return _DEFAULT_ENTRY_BYTES
+
 
 class PlanCache:
     """An LRU mapping from plan keys to built Plan objects."""
 
-    def __init__(self, maxsize: int = 128):
+    def __init__(self, maxsize: int = 128, max_bytes: int = 1 << 30):
         if maxsize < 1:
             raise ValueError("maxsize must be >= 1")
+        if max_bytes < 1:
+            raise ValueError("max_bytes must be >= 1")
         self.maxsize = maxsize
-        self._data: OrderedDict = OrderedDict()
+        self.max_bytes = int(max_bytes)
+        self._data: OrderedDict = OrderedDict()   # key -> (plan, nbytes)
+        self._bytes = 0
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
@@ -48,28 +67,47 @@ class PlanCache:
             if key in self._data:
                 self._data.move_to_end(key)
                 self.hits += 1
-                return self._data[key]
+                return self._data[key][0]
         plan = builder()
+        cost = _entry_bytes(plan)
         with self._lock:
             self.misses += 1
-            self._data[key] = plan
+            old = self._data.get(key)
+            if old is not None:                  # lost a build race
+                self._bytes -= old[1]
+            self._data[key] = (plan, cost)
             self._data.move_to_end(key)
-            while len(self._data) > self.maxsize:
-                self._data.popitem(last=False)
+            self._bytes += cost
+            # never evict the entry just inserted, even if it alone
+            # overflows the byte budget
+            while len(self._data) > 1 and (
+                    self._bytes > self.max_bytes
+                    or len(self._data) > self.maxsize):
+                _, (_, freed) = self._data.popitem(last=False)
+                self._bytes -= freed
                 self.evictions += 1
         return plan
 
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
+            self._bytes = 0
             self.hits = self.misses = self.evictions = 0
+
+    @property
+    def resident_bytes(self) -> int:
+        """Estimated bytes currently pinned by cached plans."""
+        with self._lock:
+            return self._bytes
 
     @property
     def stats(self) -> dict:
         with self._lock:
             return {"size": len(self._data), "maxsize": self.maxsize,
                     "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions}
+                    "evictions": self.evictions,
+                    "resident_bytes": self._bytes,
+                    "max_bytes": self.max_bytes}
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         s = self.stats

@@ -191,6 +191,24 @@ class Plan:
         raise NotImplementedError
 
     # ---------------------------------------------------------- accounting
+    def estimated_bytes(self) -> int:
+        """Rough resident bytes this plan pins while cached.
+
+        The PlanCache weighs entries by this instead of counting them:
+        large-n plans hold big operand tables while tiny plans are nearly
+        free, so a count-based LRU evicts the wrong things.  The estimate
+        charges each FFT stage its (wr, wi, ws) f32 DFT-matrix planes —
+        deliberately ignoring that ``dft_matrix_device`` shares identical
+        matrices across plans — plus a flat overhead for descriptors and
+        traced executors.  Subclasses add their private tables (the
+        plane-wave sphere pack index and mask).
+        """
+        total = 4096
+        for st in self.stages:
+            if isinstance(st, FFTStage):
+                total += 3 * 4 * st.n_in * st.n_out
+        return total
+
     def flop_count(self) -> int:
         total = 0
         sizes = {d: n for d, n in zip(self.tin.dims, self.tin.shape)}

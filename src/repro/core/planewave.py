@@ -132,9 +132,49 @@ class PlaneWaveFFT(Plan):
 
     # ---------------------------------------------------------- accounting
     # flop_count/comm_stats come from Plan via the delegated stage list
+    def estimated_bytes(self) -> int:
+        """Stage operands plus the per-sphere pack index and mask tables —
+        the tables are what makes distinct spheres expensive cache entries.
+        """
+        return (int(self._pack_idx.nbytes) + int(self._mask.nbytes)
+                + super().estimated_bytes())
+
     def describe(self) -> str:
         return ("PlaneWaveFFT sphere d=%d -> grid n=%d\n" %
                 (self.sphere.extents[0], self.n[0])) + self.plan.describe()
+
+
+def planewave_spec(batch_axes: tuple[int, ...] = (),
+                   fft_axes: tuple[int, ...] = (0,)) -> str:
+    """Arrow spec for the batched sphere↔cube transform on a given grid.
+
+    The batch dim rides ``batch_axes`` (bands — and k-points, when the
+    caller stacks them), the transform dims ride ``fft_axes``: x carries
+    every fft axis on the sphere side, Z on the cube side, so the staged
+    schedule's all_to_alls all run over the fft axes and the batch axes
+    never communicate.  ``planewave_spec()`` with no batch axes is the 1D
+    layout the dft subsystem used to pin (``"b x{0} y z -> b X Y Z{0}"``).
+    """
+    from .dtensor import dims_string
+    bspec = {"b": tuple(batch_axes)} if batch_axes else {}
+    in_s = dims_string(("b", "x", "y", "z"),
+                       {**bspec, "x": tuple(fft_axes)})
+    out_s = dims_string(("b", "X", "Y", "Z"),
+                        {**bspec, "Z": tuple(fft_axes)})
+    return f"{in_s} -> {out_s}"
+
+
+def cube_spec(fft_axes: tuple[int, ...] = (0,)) -> str:
+    """Arrow spec for the unbatched full-cube transform (density fields).
+
+    Only the fft axes appear — on a (batch, fft) 2D grid the cube transform
+    is replicated over the batch axes (every band/k group needs the full
+    density and potential anyway).
+    """
+    from .dtensor import dims_string
+    in_s = dims_string(("x", "y", "z"), {"z": tuple(fft_axes)})
+    out_s = dims_string(("X", "Y", "Z"), {"Z": tuple(fft_axes)})
+    return f"{in_s} -> {out_s}"
 
 
 def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
@@ -148,7 +188,8 @@ def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
     inverse: sphere bounding-cube (b, x{F}, y, z) → real cube (b, X, Y, Z{F})
     forward: the derived mirror (``inv.inverse()``) — exact adjoint layouts,
     so `forward(inverse(c))` round-trips without extra movement, and the
-    pair costs a single schedule search.
+    pair costs a single schedule search.  ``batch_axes`` shard the band
+    batch over extra grid axes (the paper's §3.3 batch×fft 2D grids).
     """
     if fft_axes is None:
         fft_axes = tuple(a for a in range(grid.ndim) if a not in batch_axes)
@@ -156,13 +197,10 @@ def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
     sph = sphere
     cube = Domain((0, 0, 0), (n - 1, n - 1, n - 1))
 
-    from .dtensor import dims_string as spec
-
-    bspec = {"b": tuple(batch_axes)} if batch_axes else {}
-    in_i = DistTensor.create((bdom, sph), spec(
-        ("b", "x", "y", "z"), {**bspec, "x": tuple(fft_axes)}), grid)
-    out_i = DistTensor.create((bdom, cube), spec(
-        ("b", "X", "Y", "Z"), {**bspec, "Z": tuple(fft_axes)}), grid)
+    in_s, out_s = planewave_spec(
+        tuple(batch_axes), tuple(fft_axes)).split(" -> ")
+    in_i = DistTensor.create((bdom, sph), in_s, grid)
+    out_i = DistTensor.create((bdom, cube), out_s, grid)
     inv = PlaneWaveFFT(sph, (n, n, n), in_i, out_i, inverse=True,
                        backend=backend, policy=policy)
     return inv, inv.inverse()

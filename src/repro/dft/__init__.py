@@ -22,7 +22,8 @@ Quickstart::
 
 from .basis import CUBE_SPEC, PW_SPEC, PlaneWaveBasis
 from .density import density_from_orbitals
-from .hamiltonian import apply_hamiltonian, update_bands
+from .hamiltonian import (apply_hamiltonian, apply_hamiltonian_pipelined,
+                          update_bands, update_bands_all_k)
 from .hartree import HartreeSolver, coulomb_kernel
 from .potentials import gaussian_wells, lda_exchange
 from .scf import (AndersonMixer, LinearMixer, SCFConfig, SCFResult, run_scf,
@@ -30,7 +31,8 @@ from .scf import (AndersonMixer, LinearMixer, SCFConfig, SCFResult, run_scf,
 
 __all__ = [
     "PlaneWaveBasis", "PW_SPEC", "CUBE_SPEC", "density_from_orbitals",
-    "apply_hamiltonian", "update_bands", "HartreeSolver", "coulomb_kernel",
+    "apply_hamiltonian", "apply_hamiltonian_pipelined", "update_bands",
+    "update_bands_all_k", "HartreeSolver", "coulomb_kernel",
     "gaussian_wells", "lda_exchange", "SCFConfig", "SCFResult", "run_scf",
     "total_energy", "LinearMixer", "AndersonMixer",
 ]

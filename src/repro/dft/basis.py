@@ -10,6 +10,14 @@ multi-plan traffic the process-global ``PlanCache`` exists for: distinct
 spheres build distinct plans, repeated spheres (and every later SCF
 iteration) hit the cache.
 
+Processing grids (paper §3.3): the basis runs on 1D fft-only grids *or* 2D
+(batch × fft) grids.  On a 2D grid the band batch is sharded over the batch
+axes and only the fft axes carry the transforms' all_to_alls — the paper's
+headline configuration, which keeps scaling after the fft axes saturate the
+sphere diameter.  When ``nk`` divides the batch-axis size, the density
+build additionally stacks k-points into the batch dimension (one transform
+of batch nk·nbands), so k-points are genuinely distributed too.
+
 Units: cubic cell of side ``L`` (default: ``n`` grid spacings of 1), so a
 reciprocal-lattice step is 2π/L.  k-points are given in reduced coordinates
 (units of 2π/L).  The sphere is centered at c_k = c0 + k, and the kinetic
@@ -19,18 +27,22 @@ construction.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Domain, ProcGrid, SphereDomain, fftb
+from repro.core import (Domain, ProcGrid, SphereDomain, cube_spec, fftb,
+                        planewave_spec)
 from repro.core.policy import ExecPolicy
 
 #: sphere bounding-cube (bands, x, y, z) → real-space cube, x/Z sharded
-PW_SPEC = "b x{0} y z -> b X Y Z{0}"
+#: (the 1D fft-only layout; 2D grids derive their spec via planewave_spec)
+PW_SPEC = planewave_spec()
 #: full density/potential cube, real space (z-sharded) → G space (Z-sharded)
-CUBE_SPEC = "x y z{0} -> X Y Z{0}"
+CUBE_SPEC = cube_spec()
 
 
 class PlaneWaveBasis:
@@ -42,11 +54,18 @@ class PlaneWaveBasis:
     to request the same sphere — is the cache's hit counter, not a private
     dict.  Derived mirrors are memoized on the plan itself (``inverse()``),
     so a pair costs one schedule search process-wide.
+
+    ``grid`` may be 1D (fft-only, the former pinned layout) or multi-axis.
+    On a multi-axis grid ``batch_axes``/``fft_axes`` split the grid axes
+    between the band batch and the transform dims; by default the leading
+    axes are batch and the last axis is fft — a ``(batch, fft)`` mesh.
     """
 
     def __init__(self, n: int, *, diameter: int | None = None,
                  kpts=((0.0, 0.0, 0.0),), weights=None, nbands: int = 4,
                  L: float | None = None, grid: ProcGrid | None = None,
+                 batch_axes: tuple[int, ...] | None = None,
+                 fft_axes: tuple[int, ...] | None = None,
                  policy: ExecPolicy | None = None, backend: str = "matmul"):
         self.n = int(n)
         self.d = int(diameter) if diameter is not None else self.n // 2
@@ -58,6 +77,38 @@ class PlaneWaveBasis:
         self.nbands = int(nbands)
         self.policy = policy
         self.backend = backend
+
+        if batch_axes is None:
+            # (batch, …, fft) convention: last axis transforms, the rest
+            # carry the band batch; a 1D grid stays fft-only
+            batch_axes = tuple(range(self.grid.ndim - 1))
+        self.batch_axes = tuple(batch_axes)
+        if fft_axes is None:
+            fft_axes = tuple(a for a in range(self.grid.ndim)
+                             if a not in self.batch_axes)
+        self.fft_axes = tuple(fft_axes)
+        used = self.batch_axes + self.fft_axes
+        if len(set(used)) != len(used) or not self.fft_axes or any(
+                a >= self.grid.ndim or a < 0 for a in used):
+            raise ValueError(
+                f"batch_axes {self.batch_axes} / fft_axes {self.fft_axes} "
+                f"must be disjoint valid axes of {self.grid} with at least "
+                "one fft axis")
+        self.batch_procs = math.prod(
+            self.grid.axis_size(a) for a in self.batch_axes)
+        self.fft_procs = math.prod(
+            self.grid.axis_size(a) for a in self.fft_axes)
+        if self.nbands % self.batch_procs:
+            raise ValueError(
+                f"nbands {self.nbands} not divisible by the batch-axis "
+                f"size {self.batch_procs} of {self.grid}")
+        if self.d % self.fft_procs or self.n % self.fft_procs:
+            raise ValueError(
+                f"sphere diameter {self.d} and cube width {self.n} must "
+                f"both divide over the fft-axis size {self.fft_procs} "
+                f"of {self.grid}")
+        self._pw_spec = planewave_spec(self.batch_axes, self.fft_axes)
+        self._cube_spec = cube_spec(self.fft_axes)
 
         self.kpts = np.atleast_2d(np.asarray(kpts, np.float64))
         if self.kpts.shape[1] != 3:
@@ -101,6 +152,20 @@ class PlaneWaveBasis:
     def npacked(self, ik: int) -> int:
         return self.spheres[ik].npacked
 
+    @property
+    def stacks_k(self) -> bool:
+        """True when the density build stacks k-points into the batch dim.
+
+        On a (batch × fft) grid with nk dividing the batch-axis size, the
+        nk·nbands stacked batch splits evenly over the batch axes, so
+        k-points (not just bands) are sharded — the ISSUE's "shard bands
+        and k-points over the batch axis" configuration.
+        """
+        return (bool(self.batch_axes) and self.nk > 1
+                and self.batch_procs > 1
+                and self.batch_procs % self.nk == 0
+                and (self.nk * self.nbands) % self.batch_procs == 0)
+
     # ------------------------------------------------------- G bookkeeping
     def gvectors(self, ik: int) -> np.ndarray:
         """(npacked, 3) G+k offsets from the sphere center, in units 2π/L.
@@ -130,21 +195,39 @@ class PlaneWaveBasis:
         Served from the process-global PlanCache — the first request per
         distinct sphere builds (one schedule search), every later request
         (same k re-visited, next SCF iteration, a symmetry-equivalent
-        k-point) is a cache hit.
+        k-point) is a cache hit.  On a 2D grid the band batch rides the
+        batch axes, the staged transposes ride the fft axes.
         """
         inv = fftb.plan_for(
-            PW_SPEC, domains=(self.bdom, self.spheres[ik]), grid=self.grid,
+            self._pw_spec, domains=(self.bdom, self.spheres[ik]),
+            grid=self.grid, sizes=(self.n,) * 3, inverse=True,
+            backend=self.backend, policy=self.policy)
+        return inv, inv.inverse()       # mirror is memoized on the plan
+
+    def stacked_inverse_plan(self):
+        """One d³→n³ inverse plan batching all nk·nbands orbitals at once.
+
+        The spheres differ only in their pack tables; the staged-padding
+        FFT itself sees the shared d³ bounding box, so every k-point's
+        cube can ride a single transform whose batch dim is nk·nbands —
+        sharding *k-points and bands* over the batch axes.  Used by the
+        density build when :attr:`stacks_k` holds.
+        """
+        bdom = Domain((0,), (self.nk * self.nbands - 1,))
+        bbox = Domain((0, 0, 0), (self.d - 1,) * 3)
+        return fftb.plan_for(
+            self._pw_spec, domains=(bdom, bbox), grid=self.grid,
             sizes=(self.n,) * 3, inverse=True, backend=self.backend,
             policy=self.policy)
-        return inv, inv.inverse()       # mirror is memoized on the plan
 
     def cube_plans(self):
         """(forward, inverse) full-cube pair for density/potential fields."""
         fwd = fftb.plan_for(
-            CUBE_SPEC, domains=self.cube, grid=self.grid,
+            self._cube_spec, domains=self.cube, grid=self.grid,
             backend=self.backend, policy=self.policy)
         return fwd, fwd.inverse()       # mirror is memoized on the plan
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"PlaneWaveBasis(n={self.n}, d={self.d}, nk={self.nk}, "
-                f"nbands={self.nbands}, grid={self.grid})")
+                f"nbands={self.nbands}, grid={self.grid}, "
+                f"batch_axes={self.batch_axes}, fft_axes={self.fft_axes})")

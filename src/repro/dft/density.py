@@ -10,12 +10,29 @@ The per-k inverse plans come from the plan cache (one batched transform per
 k-point, bands batched); the accumulation runs on the real-space cubes as
 they come out of the plans — z-sharded on a multi-device grid — so the sum
 over bands and k-points never gathers the mesh.
+
+On a (batch × fft) 2D grid where ``nk`` divides the batch-axis size
+(``basis.stacks_k``), all k-points' bounding cubes are stacked into one
+batch of nk·nbands and pushed through a *single* staged-padding transform
+(``basis.stacked_inverse_plan()``): the batch axes then shard k-points and
+bands jointly, and nk per-k dispatches collapse into one.
 """
 from __future__ import annotations
 
 import numpy as np
 
 import jax.numpy as jnp
+
+
+def _density_stacked(basis, coeffs, occ) -> jnp.ndarray:
+    """One nk·nbands-batched transform; k and bands shard the batch axes."""
+    cubes = []
+    for ik, c in enumerate(coeffs):
+        inv, _ = basis.plans_for_k(ik)         # pack tables stay per-sphere
+        cubes.append(inv.unpack(c))
+    psi = basis.stacked_inverse_plan()(jnp.concatenate(cubes, axis=0))
+    w = (basis.weights[:, None] * occ).reshape(-1).astype(np.float32)
+    return jnp.tensordot(jnp.asarray(w), jnp.abs(psi) ** 2, axes=(0, 0))
 
 
 def density_from_orbitals(basis, coeffs, occ) -> jnp.ndarray:
@@ -29,12 +46,15 @@ def density_from_orbitals(basis, coeffs, occ) -> jnp.ndarray:
         raise ValueError(
             f"occ shape {occ.shape} != (nk, nbands) = "
             f"({basis.nk}, {basis.nbands})")
-    rho = jnp.zeros((basis.n,) * 3, jnp.float32)
-    for ik, c in enumerate(coeffs):
-        inv, _ = basis.plans_for_k(ik)
-        psi = inv(inv.unpack(c))                      # (nb, n, n, n) sharded
-        f = jnp.asarray((basis.weights[ik] * occ[ik]).astype(np.float32))
-        rho = rho + jnp.tensordot(f, jnp.abs(psi) ** 2, axes=(0, 0))
+    if getattr(basis, "stacks_k", False):
+        rho = _density_stacked(basis, coeffs, occ)
+    else:
+        rho = jnp.zeros((basis.n,) * 3, jnp.float32)
+        for ik, c in enumerate(coeffs):
+            inv, _ = basis.plans_for_k(ik)
+            psi = inv(inv.unpack(c))              # (nb, n, n, n) sharded
+            f = jnp.asarray((basis.weights[ik] * occ[ik]).astype(np.float32))
+            rho = rho + jnp.tensordot(f, jnp.abs(psi) ** 2, axes=(0, 0))
     return rho * jnp.float32(basis.n ** 3 / basis.dv)
 
 

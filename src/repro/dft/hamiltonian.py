@@ -36,6 +36,42 @@ def apply_hamiltonian(basis, ik: int, c, v_eff):
     return kin[None, :] * c + inv.pack(vpsi)
 
 
+def apply_hamiltonian_pipelined(basis, blocks, v_eff):
+    """H·c for *all* k-points, double-buffering the sphere→cube transforms.
+
+    The serial loop alternates "all_to_all-heavy inverse transform" and
+    "compute-heavy cube-space potential apply" per k-point, leaving the
+    interconnect idle during the apply.  Here k-point ``ik+1``'s inverse
+    transform (its comm) is dispatched *before* ``ik``'s potential apply,
+    so on an asynchronous backend the next k's all_to_alls are in flight
+    while the current k's cube multiply runs — the ROADMAP "pipeline
+    k-point transforms" item.  Per-k operations and their order are
+    identical to :func:`apply_hamiltonian`, so results match the serial
+    path bit-for-bit; only the dispatch interleaving differs.
+
+    ``blocks``: list of (nbands, npacked_k) coefficient blocks, one per k.
+    Returns the list of H·c blocks in k order.
+    """
+    nk = len(blocks)
+    if nk == 0:
+        return []
+    plans = [basis.plans_for_k(ik) for ik in range(nk)]
+    inv0 = plans[0][0]
+    psi = inv0(inv0.unpack(blocks[0]))        # prologue: k=0 in flight
+    out = []
+    for ik in range(nk):
+        psi_next = None
+        if ik + 1 < nk:                       # issue k+1's comm first …
+            inv_n = plans[ik + 1][0]
+            psi_next = inv_n(inv_n.unpack(blocks[ik + 1]))
+        inv, fwd = plans[ik]                  # … then apply V for k
+        vpsi = fwd(psi * v_eff)
+        out.append(basis.kinetic(ik)[None, :] * blocks[ik]
+                   + inv.pack(vpsi))
+        psi = psi_next
+    return out
+
+
 def orthonormalize(c):
     """QR re-orthonormalization; bands are rows of c."""
     q, r = jnp.linalg.qr(c.T)
@@ -59,7 +95,6 @@ def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
 
     Returns (rotated coefficients, eigenvalues ascending, n_h_applies).
     """
-    nb = c.shape[0]
     kin = basis.kinetic(ik)
     pre = (1.0 / (1.0 + kin))[None, :]
     napply = 0
@@ -67,15 +102,57 @@ def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
     for _ in range(steps):
         hc = apply_hamiltonian(basis, ik, c, v_eff)
         napply += 1
-        lam = jnp.sum(jnp.conj(c) * hc, axis=1).real
-        grad = hc - lam[:, None] * c
-        d = orthonormalize(_project_out(pre * grad, c))
+        d = _descent_direction(c, hc, pre)
         hd = apply_hamiltonian(basis, ik, d, v_eff)
         napply += 1
-        basis_block = jnp.concatenate([c, d], axis=0)        # (2nb, np)
-        h_block = jnp.concatenate([hc, hd], axis=0)
-        hmat = jnp.conj(basis_block) @ h_block.T             # ⟨b_i|H|b_j⟩
-        eps, vecs = jnp.linalg.eigh(0.5 * (hmat + jnp.conj(hmat).T))
-        c = orthonormalize(vecs[:, :nb].T @ basis_block)
-        eps = eps[:nb]
+        c, eps = _rayleigh_ritz(c, d, hc, hd)
     return c, eps, napply
+
+
+def _descent_direction(c, hc, pre):
+    """Preconditioned residual block, orthonormalized against the bands."""
+    lam = jnp.sum(jnp.conj(c) * hc, axis=1).real
+    grad = hc - lam[:, None] * c
+    return orthonormalize(_project_out(pre * grad, c))
+
+
+def _rayleigh_ritz(c, d, hc, hd):
+    """Lowest-nb Ritz vectors of span{c, d}; returns (c', eps ascending)."""
+    nb = c.shape[0]
+    basis_block = jnp.concatenate([c, d], axis=0)            # (2nb, np)
+    h_block = jnp.concatenate([hc, hd], axis=0)
+    hmat = jnp.conj(basis_block) @ h_block.T                 # ⟨b_i|H|b_j⟩
+    eps, vecs = jnp.linalg.eigh(0.5 * (hmat + jnp.conj(hmat).T))
+    return orthonormalize(vecs[:, :nb].T @ basis_block), eps[:nb]
+
+
+def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3):
+    """Pipelined locally-optimal band update across *every* k-point.
+
+    The per-k math is :func:`update_bands` exactly — same preconditioner,
+    same Rayleigh-Ritz step, same op order within each k — but the loop
+    nest is inverted (steps outer, k inner) so each step's two H-apply
+    sweeps go through :func:`apply_hamiltonian_pipelined`: k+1's
+    sphere→cube all_to_alls are dispatched before k's cube-space potential
+    apply.  Because no arithmetic crosses k-points, the results are
+    bitwise identical to running ``update_bands`` serially per k.
+
+    Returns (new coefficient blocks, eigenvalues list [(nbands,)] per k,
+    pipelined H sweeps executed — each sweep is one H apply per k-point).
+    """
+    nk = len(coeffs)
+    cs = list(coeffs)
+    pres = [(1.0 / (1.0 + basis.kinetic(ik)))[None, :] for ik in range(nk)]
+    eps_out = [None] * nk
+    nsweep = 0
+    for _ in range(steps):
+        hcs = apply_hamiltonian_pipelined(basis, cs, v_eff)
+        nsweep += 1
+        ds = [_descent_direction(cs[ik], hcs[ik], pres[ik])
+              for ik in range(nk)]
+        hds = apply_hamiltonian_pipelined(basis, ds, v_eff)
+        nsweep += 1
+        for ik in range(nk):
+            cs[ik], eps_out[ik] = _rayleigh_ritz(cs[ik], ds[ik],
+                                                 hcs[ik], hds[ik])
+    return cs, eps_out, nsweep

@@ -31,7 +31,7 @@ from repro.core.policy import ExecPolicy
 
 from .basis import PlaneWaveBasis
 from .density import density_from_orbitals, electron_count
-from .hamiltonian import orthonormalize, update_bands
+from .hamiltonian import orthonormalize, update_bands, update_bands_all_k
 from .hartree import HartreeSolver
 from .potentials import gaussian_wells, lda_exchange
 
@@ -116,6 +116,9 @@ class SCFConfig:
     mix_history: int = 5
     mix_warmup: int = 2               # linear iterations before Anderson
     seed: int = 0
+    pipeline: bool = True             # double-buffer the per-k transforms
+    batch_axes: tuple | None = None   # grid axes carrying the band batch
+    fft_axes: tuple | None = None     # grid axes carrying the transforms
     policy: ExecPolicy | None = None
     backend: str = "matmul"
 
@@ -133,6 +136,7 @@ class SCFResult:
                                       # (plan calls batch nbands of them)
     seconds: float
     cache_stats: dict                 # global PlanCache counters (delta)
+    grid_shape: tuple = ()            # processing-grid shape the run used
 
     @property
     def transforms_per_s(self) -> float:
@@ -186,8 +190,9 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
     """
     basis = PlaneWaveBasis(
         cfg.n, diameter=cfg.diameter, kpts=cfg.kpts, weights=cfg.weights,
-        nbands=cfg.nbands, L=cfg.L, grid=grid, policy=cfg.policy,
-        backend=cfg.backend)
+        nbands=cfg.nbands, L=cfg.L, grid=grid,
+        batch_axes=cfg.batch_axes, fft_axes=cfg.fft_axes,
+        policy=cfg.policy, backend=cfg.backend)
     cache0 = dict(global_plan_cache().stats)
     if v_ext is None:
         v_ext = jnp.asarray(gaussian_wells(cfg.n, depth=cfg.depth))
@@ -223,11 +228,21 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         if cfg.xc:
             _, v_x = lda_exchange(rho)
             v_eff = v_eff + v_x
-        for ik in range(basis.nk):
-            coeffs[ik], eps, napply = update_bands(
-                basis, ik, coeffs[ik], v_eff, steps=cfg.inner_steps)
-            eigs[ik] = np.asarray(eps)
-            transforms += napply * 2 * basis.nbands
+        if cfg.pipeline:
+            # pipelined k-loop: each inner step sweeps every k-point with
+            # k+1's sphere→cube comm dispatched before k's potential apply
+            # — per-k math identical to the serial branch below
+            coeffs, eps_list, nsweep = update_bands_all_k(
+                basis, coeffs, v_eff, steps=cfg.inner_steps)
+            for ik in range(basis.nk):
+                eigs[ik] = np.asarray(eps_list[ik])
+            transforms += nsweep * basis.nk * 2 * basis.nbands
+        else:
+            for ik in range(basis.nk):
+                coeffs[ik], eps, napply = update_bands(
+                    basis, ik, coeffs[ik], v_eff, steps=cfg.inner_steps)
+                eigs[ik] = np.asarray(eps)
+                transforms += napply * 2 * basis.nbands
         rho_out = density_from_orbitals(basis, coeffs, occ)
         transforms += basis.nk * basis.nbands
         energy, _ = total_energy(basis, coeffs, rho_out, v_ext, hartree,
@@ -259,4 +274,5 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         converged=converged, iterations=len(energies),
         energy=energies[-1] if energies else float("nan"),
         energies=energies, residuals=residuals, eigenvalues=eigs, rho=rho,
-        transforms=transforms, seconds=seconds, cache_stats=delta)
+        transforms=transforms, seconds=seconds, cache_stats=delta,
+        grid_shape=tuple(basis.grid.shape))

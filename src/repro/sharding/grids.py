@@ -1,0 +1,74 @@
+"""Process-grid selection for the DFT workload: 1D fft-only vs 2D batch×fft.
+
+The paper's §3.3 argument: once the fft axes saturate what the sphere
+diameter can absorb (an all_to_all needs the moved dim divisible by the
+axis size, and message sizes shrink linearly with it), the *batch*
+dimension — bands, and k-points stacked with them — is the axis that keeps
+scaling.  ``choose_dft_grid`` encodes that rule of thumb so benchmarks,
+examples and services don't each hand-roll mesh shapes:
+
+  * few devices relative to the sphere diameter → 1D fft grid (one
+    transpose, biggest messages);
+  * more devices → (batch, fft) 2D grid with the largest fft factor that
+    keeps per-device pencils thick, the rest of the machine on the batch
+    axis — provided the band count (or ``nk·nbands``, the k-stacked
+    density batch) divides it.
+"""
+from __future__ import annotations
+
+from repro.core import ProcGrid
+
+#: default mesh-axis names for the DFT grids built here
+DFT_AXES_2D = ("dft_b", "dft_f")
+DFT_AXES_1D = ("dft_f",)
+
+
+def choose_dft_grid_shape(ndevices: int, *, nbands: int, diameter: int,
+                          nk: int = 1,
+                          max_fft_fraction: int = 4) -> tuple[int, ...]:
+    """Pick a grid shape (1- or 2-tuple) for ``ndevices``.
+
+    1D ``(ndevices,)`` while ``ndevices · max_fft_fraction ≤ diameter``
+    (per-device pencils stay ≥ ``max_fft_fraction`` lines thick).  Beyond
+    that, the 2D split ``(pb, pf)`` with the largest feasible fft factor
+    ``pf`` (divides both ``ndevices`` and ``diameter``, keeps the pencil
+    rule) whose batch factor ``pb = ndevices // pf`` divides ``nbands`` —
+    the per-k sphere plans always batch exactly ``nbands`` bands, so this
+    is a hard ``PlaneWaveBasis`` requirement.  Among qualifying splits,
+    one whose ``pb`` is also divisible by ``nk`` is preferred (it unlocks
+    the k-stacked density batch, ``basis.stacks_k``).  Falls back to
+    ``(ndevices,)`` when no split qualifies (the basis's own divisibility
+    checks then produce the actionable error).
+    """
+    if ndevices < 1:
+        raise ValueError(f"ndevices must be >= 1, got {ndevices}")
+    if ndevices == 1 or ndevices * max_fft_fraction <= diameter:
+        return (ndevices,)
+    fft_cands = [f for f in range(ndevices, 0, -1)
+                 if ndevices % f == 0 and diameter % f == 0
+                 and f * max_fft_fraction <= diameter]
+    valid: list[tuple[int, int]] = []
+    for pf in fft_cands:
+        pb = ndevices // pf
+        if pb == 1:
+            return (pf,)                  # whole machine fits on fft axes
+        if nbands % pb == 0:
+            valid.append((pb, pf))
+    for pb, pf in valid:                  # prefer k-stackable batch axes
+        if nk > 1 and pb % nk == 0:
+            return (pb, pf)
+    if valid:
+        return valid[0]
+    return (ndevices,)
+
+
+def choose_dft_grid(ndevices: int | None = None, *, nbands: int,
+                    diameter: int, nk: int = 1,
+                    max_fft_fraction: int = 4) -> ProcGrid:
+    """Build the ProcGrid ``choose_dft_grid_shape`` picks."""
+    import jax
+    nd = int(ndevices) if ndevices is not None else jax.device_count()
+    shape = choose_dft_grid_shape(nd, nbands=nbands, diameter=diameter,
+                                  nk=nk, max_fft_fraction=max_fft_fraction)
+    names = DFT_AXES_2D if len(shape) == 2 else DFT_AXES_1D
+    return ProcGrid.create(list(shape), list(names))

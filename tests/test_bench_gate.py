@@ -1,0 +1,132 @@
+"""Perf-trajectory gate plumbing: compare.py verdicts, atomic JSON writes,
+and the scf-2d grid-shape picker — pure-python, no transforms executed."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from benchmarks.compare import compare_records  # noqa: E402
+from benchmarks.compare import main as compare_main  # noqa: E402
+from benchmarks.run import atomic_json_dump, scf_2d_grid_shape  # noqa: E402
+
+
+def _record(tps=200.0, grid=(4,), converged=True, devices=4):
+    return {
+        "scenario": {"n": 16, "nbands": 4, "devices": devices,
+                     "quick": True},
+        "grid_shape": list(grid),
+        "converged": converged,
+        "transforms_per_s": tps,
+    }
+
+
+# ---------------------------------------------------------------- verdicts
+def test_gate_passes_within_tolerance():
+    base = {"scf": _record(200.0), "scf-2d": _record(230.0, grid=(2, 2))}
+    cur = {"scf": _record(165.0), "scf-2d": _record(250.0, grid=(2, 2))}
+    assert compare_records(cur, base, tolerance=0.20) == []
+
+
+def test_gate_fails_on_regression():
+    base = {"scf": _record(200.0)}
+    cur = {"scf": _record(150.0)}          # -25% < -20% tolerance
+    failures = compare_records(cur, base, tolerance=0.20)
+    assert len(failures) == 1 and "regressed" in failures[0]
+    assert compare_records(cur, base, tolerance=0.30) == []
+
+
+def test_gate_fails_on_missing_scenario_and_nonconvergence():
+    base = {"scf": _record(), "scf-2d": _record(grid=(2, 2))}
+    cur = {"scf": _record(converged=False)}
+    failures = compare_records(cur, base)
+    assert any("missing" in f for f in failures)
+    assert any("did not converge" in f for f in failures)
+
+
+def test_gate_fails_on_config_mismatch():
+    base = {"scf": _record(grid=(4,))}
+    cur = {"scf": _record(250.0, grid=(2, 2))}   # faster but different grid
+    failures = compare_records(cur, base)
+    assert any("grid_shape changed" in f for f in failures)
+    cur2 = {"scf": _record(250.0, devices=8)}
+    assert any("scenario changed" in f
+               for f in compare_records(cur2, base))
+
+
+def test_gate_extra_current_scenarios_are_fine():
+    base = {"scf": _record()}
+    cur = {"scf": _record(), "scf-2d": _record(grid=(2, 2))}
+    assert compare_records(cur, base) == []
+
+
+# --------------------------------------------------------------- CLI paths
+def _dump(path, scenarios):
+    with open(path, "w") as f:
+        json.dump({"schema": 2, "scenarios": scenarios}, f)
+
+
+def test_compare_main_exit_codes(tmp_path, capsys):
+    cur, base = tmp_path / "cur.json", tmp_path / "base.json"
+    _dump(cur, {"scf": _record(200.0)})
+    _dump(base, {"scf": _record(210.0)})
+    assert compare_main([str(cur), str(base)]) == 0
+    _dump(cur, {"scf": _record(100.0)})
+    assert compare_main([str(cur), str(base)]) == 1
+    assert "PERF GATE FAILED" in capsys.readouterr().out
+
+
+def test_compare_main_update_baseline(tmp_path):
+    cur, base = tmp_path / "cur.json", tmp_path / "base.json"
+    _dump(cur, {"scf": _record(123.0)})
+    _dump(base, {"scf": _record(500.0)})
+    assert compare_main([str(cur), str(base), "--update-baseline"]) == 0
+    refreshed = json.load(open(base))
+    assert refreshed["scenarios"]["scf"]["transforms_per_s"] == 123.0
+    assert compare_main([str(cur), str(base)]) == 0
+
+
+def test_compare_main_rejects_legacy_schema(tmp_path):
+    cur = tmp_path / "cur.json"
+    with open(cur, "w") as f:
+        json.dump(_record(), f)            # pre-schema-2 flat record
+    with pytest.raises(SystemExit, match="schema-2"):
+        compare_main([str(cur), str(cur)])
+
+
+# ------------------------------------------------------------ atomic write
+def test_atomic_json_dump_writes_complete_file(tmp_path):
+    path = tmp_path / "BENCH_scf.json"
+    atomic_json_dump({"schema": 2, "scenarios": {}}, str(path))
+    assert json.load(open(path)) == {"schema": 2, "scenarios": {}}
+    # overwrite keeps the file valid and leaves no temp litter behind
+    atomic_json_dump({"schema": 2, "scenarios": {"scf": 1}}, str(path))
+    assert json.load(open(path))["scenarios"] == {"scf": 1}
+    assert os.listdir(tmp_path) == ["BENCH_scf.json"]
+
+
+def test_atomic_json_dump_failure_leaves_old_contents(tmp_path):
+    path = tmp_path / "BENCH_scf.json"
+    atomic_json_dump({"ok": 1}, str(path))
+    with pytest.raises(TypeError):
+        atomic_json_dump({"bad": object()}, str(path))   # not serializable
+    assert json.load(open(path)) == {"ok": 1}            # old file intact
+    assert os.listdir(tmp_path) == ["BENCH_scf.json"]    # temp cleaned up
+
+
+# ----------------------------------------------------------- 2D grid split
+def test_scf_2d_grid_shape_splits():
+    """Same policy as --grid auto (choose_dft_grid_shape), scenario-sized."""
+    assert scf_2d_grid_shape(4) == (2, 2)        # CI's baseline shape
+    assert scf_2d_grid_shape(8) == (4, 2)        # matches the chooser
+    assert scf_2d_grid_shape(1) is None
+    assert scf_2d_grid_shape(2) is None
+    # device counts with no split dividing the scenario's nbands=4 /
+    # diameter=8 skip gracefully instead of crashing PlaneWaveBasis
+    assert scf_2d_grid_shape(6) is None          # batch factor 3 ∤ 4
+    assert scf_2d_grid_shape(12) is None
+    assert scf_2d_grid_shape(16) is None         # pencil rule caps pf at 2

@@ -333,6 +333,64 @@ def test_tune_syncs_memoized_mirror(g1):
     assert inv.policy == best          # ... with the tuned policy
 
 
+def test_tune_resyncs_planewave_mirrors_on_2d_grid(g1):
+    """tune() on a 2D-grid plane-wave plan re-pins the tuned policy on the
+    already-derived inverse *and* adjoint mirrors — and mirrors derived
+    after tuning are born with it.  A (1, 1) batch×fft grid runs the 2D
+    layout/spec path on a single device."""
+    from repro.core import make_planewave_pair
+    g2 = ProcGrid.create([1, 1], ["tb", "tf"])
+    sph = SphereDomain.from_diameter(8)
+    inv, fwd = make_planewave_pair(g2, 16, sph, 2, batch_axes=(0,),
+                                   fft_axes=(1,))
+    assert inv.tin.layout == {"b": (0,), "x": (1,)}
+    adj = inv.adjoint()                # derived before tuning
+    rng = np.random.default_rng(12)
+    cube = jnp.asarray(_rand_c64(rng, (2, 8, 8, 8)))
+    best = inv.tune(cube, warmup=1, iters=1)
+    assert inv.inverse() is fwd and inv.adjoint() is adj
+    assert fwd.policy == best          # memoized mirror re-synced
+    assert adj.policy == best
+    assert fwd.adjoint().policy == best   # derived after tune: born tuned
+    # the tuned pair still round-trips on the sphere
+    packed = jnp.asarray(_rand_c64(rng, (2, sph.npacked)))
+    rt = inv.pack(inv.mask_cube(fwd(inv(inv.unpack(packed)))))
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(packed),
+                               rtol=1e-2, atol=2e-2)
+
+
+def test_tune_resyncs_mirrors_on_2x2_grid_4dev(dist):
+    """Satellite acceptance: tune() on a real 2×2 (batch×fft) grid —
+    derived inverse/adjoint mirrors pick up the tuned schedule, and the
+    pair still matches the numpy reference under the tuned policy."""
+    script = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import ProcGrid, SphereDomain, make_planewave_pair
+assert jax.device_count() == 4
+g = ProcGrid.create([2, 2], ["tb", "tf"])
+sph = SphereDomain.from_diameter(16)
+inv, fwd = make_planewave_pair(g, 32, sph, 4, batch_axes=(0,),
+                               fft_axes=(1,))
+adj = inv.adjoint()
+rng = np.random.default_rng(0)
+packed = (rng.standard_normal((4, sph.npacked))
+          + 1j*rng.standard_normal((4, sph.npacked))).astype(np.complex64)
+cube = inv.unpack(jnp.asarray(packed))
+best = inv.tune(cube, warmup=1, iters=1)
+assert inv.policy == best and fwd.policy == best and adj.policy == best
+assert inv.inverse() is fwd and inv.adjoint() is adj
+assert fwd.inverse() is inv and inv.policy == best
+y = np.asarray(inv(cube))              # executes under the tuned policy
+full = np.zeros((4, 32, 32, 32), np.complex64)
+full[:, :16, :16, :16] = np.asarray(cube)
+ref = np.fft.ifftn(full, axes=(1, 2, 3))
+rel = np.abs(y - ref).max() / np.abs(ref).max()
+assert rel < 3e-2, rel                 # winner may be the bf16 executor
+print("OK", best.mode, best.compute_dtype)
+"""
+    assert "OK" in dist(script, n_devices=4)
+
+
 # -------------------------------------------------------------- PlanCache
 def test_plan_cache_hit_and_miss(g1):
     cache = PlanCache(maxsize=8)
@@ -409,3 +467,51 @@ def test_plan_cache_lru_eviction(g1):
     misses = cache.stats["misses"]
     build(doms[1])                        # was evicted → rebuild
     assert cache.stats["misses"] == misses + 1
+
+
+def test_estimated_bytes_sphere_tables_dominate(g1):
+    """Plane-wave plans charge their pack/mask tables; bigger sphere,
+    bigger estimate — the quantity byte-weighted eviction runs on."""
+    from repro.core import make_planewave_pair
+    small, _ = make_planewave_pair(g1, 16, SphereDomain.from_diameter(8), 2)
+    large, _ = make_planewave_pair(g1, 32,
+                                   SphereDomain.from_diameter(16), 2)
+    assert small.estimated_bytes() > small.plan.estimated_bytes()
+    assert large.estimated_bytes() > 2 * small.estimated_bytes()
+    tables = int(small._pack_idx.nbytes) + int(small._mask.nbytes)
+    assert small.estimated_bytes() >= tables
+
+
+def test_plan_cache_byte_weighted_eviction(g1):
+    """Eviction triggers on resident bytes, not entry count: two sphere
+    plans exceed the byte budget long before the 64-entry ceiling."""
+    from repro.core import make_planewave_pair
+    probe, _ = make_planewave_pair(g1, 16, SphereDomain.from_diameter(8), 2)
+    budget = probe.estimated_bytes() + probe.estimated_bytes() // 2
+    cache = PlanCache(maxsize=64, max_bytes=budget)
+    b = Domain((0,), (1,))
+
+    def build(center):
+        sph = SphereDomain(radius=4.0, center=center, lower=(0, 0, 0),
+                           upper=(7, 7, 7))
+        return fftb.plan_for("b x{0} y z -> b X Y Z{0}", domains=(b, sph),
+                             grid=g1, sizes=(16, 16, 16), inverse=True,
+                             cache=cache)
+
+    build((3.5, 3.5, 3.5))
+    assert cache.stats["evictions"] == 0
+    assert 0 < cache.resident_bytes <= budget
+    build((4.0, 4.0, 4.0))               # second sphere breaks the budget
+    assert cache.stats["evictions"] == 1
+    assert len(cache) == 1               # far below maxsize=64
+    assert cache.resident_bytes <= budget
+    # a single entry bigger than the whole budget is still kept
+    tiny = PlanCache(maxsize=4, max_bytes=1)
+    tiny.get_or_build("k", lambda: probe)
+    assert len(tiny) == 1
+    assert tiny.resident_bytes == probe.estimated_bytes()
+    stats = tiny.stats
+    assert stats["resident_bytes"] == tiny.resident_bytes
+    assert stats["max_bytes"] == 1
+    tiny.clear()
+    assert tiny.resident_bytes == 0
