@@ -12,7 +12,11 @@ tolerance, when a baseline scenario disappeared from the current run, or
 when a scenario stopped converging — a silently dropped scenario must not
 read as a pass.  Scenario configs (devices, quick flag, grid shape) are
 checked too: comparing numbers measured under different configurations is
-reported as an error, not a pass.
+reported as an error, not a pass.  The other direction is *not* an error:
+a scenario present in the current run but absent from the baseline (a
+freshly added benchmark, e.g. ``scf-stacked`` before its first baseline
+refresh) is skipped with a warning and does not fail the gate — known
+scenarios still gate normally.  Refresh the baseline to start gating it.
 
 Refresh the baseline after an intentional perf change with::
 
@@ -36,9 +40,23 @@ def load_scenarios(path: str) -> dict:
     return record["scenarios"]
 
 
+def unknown_scenarios(current: dict, baseline: dict) -> list[str]:
+    """Scenarios in the current run the baseline doesn't know about.
+
+    Skipped (with a warning, never a ``KeyError`` or a failure): a freshly
+    added scenario has no number to gate against until the baseline is
+    refreshed.
+    """
+    return sorted(set(current) - set(baseline))
+
+
 def compare_records(current: dict, baseline: dict,
                     tolerance: float = 0.20) -> list[str]:
-    """Return the list of gate failures (empty = pass)."""
+    """Return the list of gate failures (empty = pass).
+
+    Only scenarios the baseline knows about gate; see
+    :func:`unknown_scenarios` for the skipped remainder.
+    """
     failures: list[str] = []
     for name, base in sorted(baseline.items()):
         cur = current.get(name)
@@ -47,7 +65,10 @@ def compare_records(current: dict, baseline: dict,
                 f"{name}: scenario present in baseline but missing from "
                 "the current run")
             continue
-        for key in ("grid_shape", "scenario"):
+        # pipeline/stacked are route fields: a run that switched routes
+        # (e.g. scf-2d riding the stacked path) measures a different
+        # configuration even with identical scenario and grid shape
+        for key in ("grid_shape", "scenario", "pipeline", "stacked"):
             if cur.get(key) != base.get(key):
                 failures.append(
                     f"{name}: {key} changed ({base.get(key)} -> "
@@ -55,8 +76,15 @@ def compare_records(current: dict, baseline: dict,
                     "comparing different configurations")
         if not cur.get("converged", False):
             failures.append(f"{name}: SCF did not converge")
-        base_tps = float(base["transforms_per_s"])
-        cur_tps = float(cur["transforms_per_s"])
+        base_tps = base.get("transforms_per_s")
+        cur_tps = cur.get("transforms_per_s")
+        if base_tps is None or cur_tps is None:
+            failures.append(
+                f"{name}: record lacks transforms_per_s "
+                f"(baseline={base_tps}, current={cur_tps}); regenerate "
+                "with benchmarks/run.py")
+            continue
+        base_tps, cur_tps = float(base_tps), float(cur_tps)
         floor = base_tps * (1.0 - tolerance)
         if cur_tps < floor:
             failures.append(
@@ -90,13 +118,19 @@ def main(argv=None) -> int:
         return 0
 
     baseline = load_scenarios(args.baseline)
+
+    def tps(rec):
+        v = rec.get("transforms_per_s") if rec else None
+        return f"{float(v):.1f}" if v is not None else "—"
+
     for name in sorted(set(current) | set(baseline)):
         cur, base = current.get(name), baseline.get(name)
-        cur_s = f"{cur['transforms_per_s']:.1f}" if cur else "—"
-        base_s = f"{base['transforms_per_s']:.1f}" if base else "—"
         grid = (cur or base).get("grid_shape")
-        print(f"{name:10s} grid={grid!s:8s} transforms/s "
-              f"baseline={base_s:>8s} current={cur_s:>8s}")
+        print(f"{name:12s} grid={grid!s:8s} transforms/s "
+              f"baseline={tps(base):>8s} current={tps(cur):>8s}")
+    for name in unknown_scenarios(current, baseline):
+        print(f"WARNING: {name}: scenario not in the baseline — skipped "
+              "(run --update-baseline to start gating it)")
     failures = compare_records(current, baseline, args.tolerance)
     if failures:
         print("\nPERF GATE FAILED:")

@@ -10,17 +10,18 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * train/decode_step   — reduced-config step microbenches (measured, CPU)
 
 ``derived`` column: modeled ms for fig9 rows, speedup/ratios elsewhere.
-The SCF scenarios (``scf`` on a 1D fft grid, ``scf-2d`` on a batch×fft 2D
-grid — both recording their grid shape) additionally write machine-readable
-``BENCH_scf.json`` (transforms/s, iterations to convergence, plan-cache hit
-rate) so the perf trajectory can be tracked across commits; CI's
-bench-trajectory job uploads it and gates regressions against
-``benchmarks/baseline.json`` via ``benchmarks/compare.py``.  The JSON is
-written atomically (temp file + rename) so an interrupted run can't leave a
-truncated artifact.
+The SCF scenarios (``scf`` on a 1D fft grid, ``scf-2d`` pipelined on a
+batch×fft 2D grid, ``scf-stacked`` with the ragged k-stacked H apply on
+the same 2D grid — each recording its grid shape and padding fraction)
+additionally write machine-readable ``BENCH_scf.json`` (transforms/s,
+iterations to convergence, plan-cache hit rate) so the perf trajectory can
+be tracked across commits; CI's bench-trajectory job uploads it and gates
+regressions against ``benchmarks/baseline.json`` via
+``benchmarks/compare.py``.  The JSON is written atomically (temp file +
+rename) so an interrupted run can't leave a truncated artifact.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
-         [--scenarios scf,scf-2d]
+         [--scenarios scf,scf-2d,scf-stacked]
 """
 from __future__ import annotations
 
@@ -34,7 +35,7 @@ import numpy as np
 
 #: selectable benchmark scenarios (--scenarios comma list, default all)
 SCENARIOS = ("table1", "plan_cache", "local_fft", "planewave", "fig9",
-             "scf", "scf-2d", "steps")
+             "scf", "scf-2d", "scf-stacked", "steps")
 
 
 def _timeit(fn, *args, warmup=2, iters=5):
@@ -230,15 +231,20 @@ def bench_fig9(rows):
                              round(_fig9_time(inv.plan), 3)))
 
 
-def bench_scf(rows, quick=False, grid_shape=None, tag="scf"):
+def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
+              stack_k=None):
     """repro.dft SCF scenario — the paper's end-to-end workload.
 
     Two k-points (two distinct sphere plans) + the full-cube Hartree pair,
     mixing-driven SCF, on a 1D fft-only grid (``tag='scf'``) or a 2D
     batch×fft grid (``tag='scf-2d'``, grid_shape e.g. (2, 2) — bands shard
-    the batch axis, the density stacks k-points into it).  Returns the
-    machine-readable record merged into BENCH_scf.json; ``grid_shape`` in
-    the record is what the trajectory gate keys scenarios by.
+    the batch axis).  ``stack_k`` pins the H-sweep route: False keeps the
+    pipelined per-k dispatch (so ``scf-2d`` stays comparable across
+    commits), True rides the ragged k-stacked batch (``scf-stacked`` —
+    one nk·nbands transform pair per sweep).  Returns the machine-readable
+    record merged into BENCH_scf.json; ``grid_shape`` in the record is
+    what the trajectory gate keys scenarios by, and ``padding_fraction``
+    reports the stacked batch's ragged-padding overhead.
     """
     import jax
     from repro.core import ProcGrid, global_plan_cache
@@ -251,7 +257,8 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf"):
     cfg = SCFConfig(n=16, nbands=4, kpts=((0, 0, 0), (0.5, 0.5, 0.5)),
                     max_iter=20 if quick else 50,
                     e_tol=1e-4 if quick else 1e-5,
-                    r_tol=1e-3 if quick else 1e-4)
+                    r_tol=1e-3 if quick else 1e-4,
+                    stack_k=stack_k)
     global_plan_cache().clear()
     res = run_scf(cfg, grid=grid)
     c = res.cache_stats
@@ -272,6 +279,8 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf"):
         },
         "grid_shape": list(grid_shape),
         "pipeline": bool(cfg.pipeline),
+        "stacked": bool(res.stacked),
+        "padding_fraction": round(res.padding_fraction, 4),
         "converged": bool(res.converged),
         "scf_iterations": res.iterations,
         "total_energy": res.energy,
@@ -360,6 +369,22 @@ def scf_2d_grid_shape(ndevices: int) -> tuple[int, int] | None:
     return shape if len(shape) == 2 else None
 
 
+def scf_stacked_grid_shape(ndevices: int) -> tuple[int, int] | None:
+    """The scf-2d split, kept only when the k-stacked batch shards evenly.
+
+    ``basis.stacks_k`` needs the batch factor to carry whole k-points
+    (``nk | pb``; the other stacks_k condition, pb | nk·nbands, already
+    follows from the chooser's pb | nbands requirement) — otherwise the
+    scenario would silently measure the pipelined fallback, so skip it.
+    """
+    shape = scf_2d_grid_shape(ndevices)
+    if shape is None:
+        return None
+    if shape[0] % SCF_NK:
+        return None
+    return shape
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -401,8 +426,24 @@ def main(argv=None) -> None:
                   f"factor dividing d={SCF_DIAMETER} "
                   "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
         else:
+            # stack_k pinned off: scf-2d tracks the pipelined per-k path,
+            # scf-stacked below tracks the ragged k-stacked H apply
             scf_records["scf-2d"] = bench_scf(
-                rows, args.quick, grid_shape=shape, tag="scf-2d")
+                rows, args.quick, grid_shape=shape, tag="scf-2d",
+                stack_k=False)
+    if "scf-stacked" in wanted:
+        import jax
+        shape = scf_stacked_grid_shape(jax.device_count())
+        if shape is None:
+            print(f"# scf-stacked skipped: no batch×fft split for "
+                  f"{jax.device_count()} device(s) whose batch factor "
+                  f"carries the nk·nbands = {SCF_NK}·{SCF_NBANDS} stacked "
+                  "batch (XLA_FLAGS=--xla_force_host_platform_device_"
+                  "count=4)")
+        else:
+            scf_records["scf-stacked"] = bench_scf(
+                rows, args.quick, grid_shape=shape, tag="scf-stacked",
+                stack_k=True)
     if "steps" in wanted:
         # --quick drops steps from the default "all" sweep, but an
         # explicitly requested scenario always runs

@@ -64,6 +64,11 @@ def main(argv=None):
     ap.add_argument("--no-pipeline", action="store_true",
                     help="serial per-k loop instead of the double-buffered "
                          "k-point pipeline")
+    ap.add_argument("--stack-k", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="ragged k-stacked H applies: 'auto' engages when "
+                         "the grid shards the nk·nbands batch evenly "
+                         "(basis.stacks_k), 'on'/'off' force the route")
     args = ap.parse_args(argv)
 
     cfg = SCFConfig(
@@ -72,6 +77,7 @@ def main(argv=None):
         inner_steps=args.inner_steps, mix_alpha=args.mix_alpha,
         depth=args.depth, xc=not args.no_xc, seed=args.seed,
         pipeline=not args.no_pipeline,
+        stack_k={"auto": None, "on": True, "off": False}[args.stack_k],
         policy=ExecPolicy.from_mode(args.policy))
     grid = parse_grid(args.grid, cfg)
 
@@ -90,9 +96,13 @@ def main(argv=None):
     for ik, eps in enumerate(res.eigenvalues):
         print(f"  k[{ik}] eigenvalues: "
               + "  ".join(f"{e:+.4f}" for e in eps))
+    route = (f"k-stacked H applies (padding "
+             f"{res.padding_fraction:.1%})" if res.stacked
+             else "pipelined per-k H applies" if cfg.pipeline
+             else "serial per-k H applies")
     print(f"{res.transforms} per-band 3D transforms in {res.seconds:.2f}s "
           f"({res.transforms_per_s:.1f} transforms/s, batched over "
-          f"{cfg.nbands} bands per plan call)")
+          f"{cfg.nbands} bands per plan call, {route})")
     c = res.cache_stats
     total = c["hits"] + c["misses"]
     print(f"plan cache: {c['misses']} builds, {c['hits']} hits "

@@ -9,8 +9,9 @@ from .fft import Transform, fftb
 from .grid import ProcGrid
 from .local_fft import dft_matrix, local_dft
 from .plan import FftPlan, Plan
-from .planewave import (PlaneWaveFFT, cube_spec, make_planewave_pair,
-                        planewave_spec)
+from .planewave import (PlaneWaveFFT, StackedPlaneWaveFFT, cube_spec,
+                        make_planewave_pair, make_stacked_planewave_pair,
+                        padded_pack_tables, planewave_spec)
 from .policy import ExecPolicy
 from .spectral import fft_conv, fourier_mixer
 
@@ -18,7 +19,9 @@ __all__ = [
     "Domain", "SphereDomain", "sphere_for_cutoff", "DistTensor",
     "parse_dims", "parse_transform_spec", "dims_string", "Transform",
     "fftb", "ProcGrid", "dft_matrix", "local_dft", "Plan", "FftPlan",
-    "PlaneWaveFFT", "make_planewave_pair", "planewave_spec", "cube_spec",
+    "PlaneWaveFFT", "StackedPlaneWaveFFT", "make_planewave_pair",
+    "make_stacked_planewave_pair", "padded_pack_tables", "planewave_spec",
+    "cube_spec",
     "ExecPolicy", "PlanCache",
     "global_plan_cache", "fft_conv", "fourier_mixer",
 ]

@@ -12,10 +12,16 @@ Eviction is LRU on *estimated bytes* (``plan.estimated_bytes()``), not on
 entry count: a large-n plane-wave plan pins megabytes of sphere index
 tables while a tiny cube plan is nearly free, so counting entries evicts
 the wrong things.  ``maxsize`` remains as a hard entry-count ceiling.
+Shared DFT-matrix operand tables (``plan.shared_table_bytes()``, memoized
+process-wide by ``local_fft.dft_matrix_device``) are refcounted by their
+``(n_out, n_in, inverse)`` key, so ``resident_bytes`` charges each table
+once however many cached plans reference it — byte budgets stay honest.
 
 Thread-safe.  Builders run outside the lock (they can take seconds), so two
-threads racing on the same cold key may both build — the cache stays
-consistent, one of the two plans wins.
+threads racing on the same cold key may both build — the *first* insert
+wins, later builders discard their duplicate and return the cached plan
+(callers may already hold references to the winner, so it must never be
+replaced under them).
 """
 from __future__ import annotations
 
@@ -29,11 +35,22 @@ from .grid import ProcGrid
 _DEFAULT_ENTRY_BYTES = 4096
 
 
-def _entry_bytes(plan) -> int:
+def _entry_cost(plan) -> tuple[int, tuple]:
+    """(private bytes, shared-table items) of a would-be cache entry.
+
+    Private bytes are billed per entry; shared tables are billed through
+    the cache's refcounts.  Objects without the Plan accounting protocol
+    (test doubles) fall back to a flat private cost.
+    """
     try:
-        return max(int(plan.estimated_bytes()), 1)
+        tables = tuple(sorted(plan.shared_table_bytes().items()))
     except Exception:
-        return _DEFAULT_ENTRY_BYTES
+        tables = ()
+    try:
+        total = int(plan.estimated_bytes())
+    except Exception:
+        return _DEFAULT_ENTRY_BYTES, ()
+    return max(total - sum(nb for _, nb in tables), 1), tables
 
 
 class PlanCache:
@@ -46,7 +63,10 @@ class PlanCache:
             raise ValueError("max_bytes must be >= 1")
         self.maxsize = maxsize
         self.max_bytes = int(max_bytes)
-        self._data: OrderedDict = OrderedDict()   # key -> (plan, nbytes)
+        # key -> (plan, private_bytes, shared-table items)
+        self._data: OrderedDict = OrderedDict()
+        # (n_out, n_in, inverse) -> [refcount, nbytes] over cached plans
+        self._table_refs: dict = {}
         self._bytes = 0
         self._lock = threading.RLock()
         self.hits = 0
@@ -61,36 +81,63 @@ class PlanCache:
         with self._lock:
             return key in self._data
 
+    def _add_entry_bytes(self, private: int, tables: tuple) -> None:
+        self._bytes += private
+        for tk, nb in tables:
+            ref = self._table_refs.get(tk)
+            if ref is None:
+                self._table_refs[tk] = [1, nb]
+                self._bytes += nb                # first reference pays
+            else:
+                ref[0] += 1
+
+    def _drop_entry_bytes(self, private: int, tables: tuple) -> None:
+        self._bytes -= private
+        for tk, nb in tables:
+            ref = self._table_refs[tk]
+            ref[0] -= 1
+            if ref[0] == 0:                      # last reference frees
+                del self._table_refs[tk]
+                self._bytes -= nb
+
     def get_or_build(self, key, builder):
-        """Return the cached plan for ``key``, building it on a miss."""
+        """Return the cached plan for ``key``, building it on a miss.
+
+        Builders run outside the lock; when two threads race on a cold
+        key the first insert wins — the later builder's duplicate is
+        discarded (other callers may already hold the winner) and its
+        caller is served the cached plan as a hit, not a miss.
+        """
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)
                 self.hits += 1
                 return self._data[key][0]
         plan = builder()
-        cost = _entry_bytes(plan)
         with self._lock:
+            won = self._data.get(key)
+            if won is not None:                  # lost a build race
+                self._data.move_to_end(key)
+                self.hits += 1
+                return won[0]
             self.misses += 1
-            old = self._data.get(key)
-            if old is not None:                  # lost a build race
-                self._bytes -= old[1]
-            self._data[key] = (plan, cost)
-            self._data.move_to_end(key)
-            self._bytes += cost
+            private, tables = _entry_cost(plan)
+            self._data[key] = (plan, private, tables)
+            self._add_entry_bytes(private, tables)
             # never evict the entry just inserted, even if it alone
             # overflows the byte budget
             while len(self._data) > 1 and (
                     self._bytes > self.max_bytes
                     or len(self._data) > self.maxsize):
-                _, (_, freed) = self._data.popitem(last=False)
-                self._bytes -= freed
+                _, (_, priv, tabs) = self._data.popitem(last=False)
+                self._drop_entry_bytes(priv, tabs)
                 self.evictions += 1
         return plan
 
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
+            self._table_refs.clear()
             self._bytes = 0
             self.hits = self.misses = self.evictions = 0
 

@@ -77,6 +77,26 @@ class ProcGrid:
     def axis_size(self, i: int) -> int:
         return self.mesh.shape[self.axes[i]]
 
+    # ------------------------------------------------------------ placement
+    def replicate(self, x):
+        """Pin an eager array onto this grid's mesh, fully replicated.
+
+        Eager ops that mix operands with different placements — a
+        shard_map output sharded over a mesh axis next to a replicated or
+        single-device block — can miscompute on multi-device meshes
+        (observed on jax 0.4.x CPU: concatenates/contractions came out
+        scaled by a mesh-axis size).  An explicit ``device_put`` onto one
+        replicated sharding makes the placement unambiguous before such
+        mixing; on a 1-process grid this is a no-op and results are
+        bitwise unchanged.
+        """
+        if self.nprocs == 1:
+            return x
+        import jax
+        sharding = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+        return jax.device_put(x, sharding)
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         dims = "x".join(str(s) for s in self.shape)
         return f"ProcGrid({dims}, axes={self.axes})"

@@ -191,23 +191,37 @@ class Plan:
         raise NotImplementedError
 
     # ---------------------------------------------------------- accounting
-    def estimated_bytes(self) -> int:
-        """Rough resident bytes this plan pins while cached.
+    def private_bytes(self) -> int:
+        """Bytes owned by this plan alone — descriptors, traced executors,
+        and (in subclasses) the sphere pack/mask or ragged-batch tables.
+        Never shared with other plans, so the cache bills them per entry."""
+        return 4096
 
-        The PlanCache weighs entries by this instead of counting them:
-        large-n plans hold big operand tables while tiny plans are nearly
-        free, so a count-based LRU evicts the wrong things.  The estimate
-        charges each FFT stage its (wr, wi, ws) f32 DFT-matrix planes —
-        deliberately ignoring that ``dft_matrix_device`` shares identical
-        matrices across plans — plus a flat overhead for descriptors and
-        traced executors.  Subclasses add their private tables (the
-        plane-wave sphere pack index and mask).
+    def shared_table_bytes(self) -> dict[tuple, int]:
+        """Device bytes of the ``dft_matrix_device`` operand tables the
+        plan's FFT stages reference, keyed by ``(n_out, n_in, inverse)``.
+
+        The tables are memoized process-wide (``local_fft.dft_matrix_device``
+        is an lru_cache), so two plans — or two stages of one plan — with
+        the same key share one device allocation.  The PlanCache refcounts
+        these keys so ``resident_bytes`` charges each table once, however
+        many cached plans reference it.
         """
-        total = 4096
+        out: dict[tuple, int] = {}
         for st in self.stages:
             if isinstance(st, FFTStage):
-                total += 3 * 4 * st.n_in * st.n_out
-        return total
+                out.setdefault((st.n_out, st.n_in, st.inverse),
+                               3 * 4 * st.n_in * st.n_out)
+        return out
+
+    def estimated_bytes(self) -> int:
+        """Rough resident bytes this plan pins while cached, considered
+        alone: private bytes plus each *distinct* DFT-matrix table it
+        references.  The PlanCache weighs entries by this instead of
+        counting them — large-n plans hold big operand tables while tiny
+        plans are nearly free — and subtracts tables already pinned by
+        other cached plans (see ``shared_table_bytes``)."""
+        return self.private_bytes() + sum(self.shared_table_bytes().values())
 
     def flop_count(self) -> int:
         total = 0

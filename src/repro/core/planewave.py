@@ -27,6 +27,8 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 import jax.numpy as jnp
 
 from .domain import Domain, SphereDomain
@@ -132,12 +134,12 @@ class PlaneWaveFFT(Plan):
 
     # ---------------------------------------------------------- accounting
     # flop_count/comm_stats come from Plan via the delegated stage list
-    def estimated_bytes(self) -> int:
-        """Stage operands plus the per-sphere pack index and mask tables —
-        the tables are what makes distinct spheres expensive cache entries.
-        """
+    def private_bytes(self) -> int:
+        """The per-sphere pack index and mask tables — what makes distinct
+        spheres expensive cache entries (DFT-matrix operands are shared
+        across plans and accounted via ``shared_table_bytes``)."""
         return (int(self._pack_idx.nbytes) + int(self._mask.nbytes)
-                + super().estimated_bytes())
+                + super().private_bytes())
 
     def describe(self) -> str:
         return ("PlaneWaveFFT sphere d=%d -> grid n=%d\n" %
@@ -203,4 +205,235 @@ def make_planewave_pair(grid, n: int, sphere: SphereDomain, nb: int, *,
     out_i = DistTensor.create((bdom, cube), out_s, grid)
     inv = PlaneWaveFFT(sph, (n, n, n), in_i, out_i, inverse=True,
                        backend=backend, policy=policy)
+    return inv, inv.inverse()
+
+
+# --------------------------------------------------------- ragged k batches
+def padded_pack_tables(spheres) -> tuple[np.ndarray, np.ndarray]:
+    """Index tables for a ragged batch of spheres sharing one bounding box.
+
+    Every sphere's CSR pack order is padded to ``npacked_max = max_k
+    npacked_k``.  The per-k validity mask is baked into the table itself:
+    padded lanes carry the *dump-slot* index ``prod(extents)`` — one flat
+    cell past the bounding cube — so an unpack scatter routes whatever sits
+    in a padded lane into a slot that is dropped, and a pack gather reads
+    padded lanes from a slot that is always zero.  No runtime masking, no
+    extra transform math for the padding.
+
+    Returns ``(idx, valid)``: ``idx`` is ``(nk, npacked_max)`` int32 flat
+    bounding-cube indices (dump slot for padded lanes), ``valid`` the
+    matching boolean lane mask.
+    """
+    spheres = list(spheres)
+    if not spheres:
+        raise ValueError("padded_pack_tables needs at least one sphere")
+    ext = spheres[0].extents
+    for s in spheres[1:]:
+        if s.extents != ext:
+            raise ValueError(
+                f"ragged sphere batch must share one bounding box; got "
+                f"extents {s.extents} vs {ext}")
+    npmax = max(s.npacked for s in spheres)
+    dump = math.prod(ext)
+    idx = np.full((len(spheres), npmax), dump, np.int32)
+    valid = np.zeros((len(spheres), npmax), bool)
+    for k, s in enumerate(spheres):
+        idx[k, :s.npacked] = s.pack_indices()
+        valid[k, :s.npacked] = True
+    return idx, valid
+
+
+class StackedPlaneWaveFFT(Plan):
+    """One sphere↔cube transform over a ragged batch of k-point spheres.
+
+    The paper's batching argument, applied across k-points: all ``nk``
+    spheres share the d³ bounding box, so their transforms differ only in
+    the static pack tables — the staged-padding FFT itself can run once
+    with batch ``nk·nbands`` instead of ``nk`` times with batch ``nbands``.
+    Packed coefficients are padded per k to ``(nk·nbands, npacked_max)``
+    with the validity masks baked into the pack/unpack tables (see
+    :func:`padded_pack_tables`): padded lanes are zeros on the transform
+    side and never read back, so raggedness costs only the padding
+    fraction, not correctness.
+
+    The inner ``FftPlan`` is the same d³→n³ stacked plan the density build
+    uses (pass it via ``plan=`` to share the cached object and its traced
+    executors); this class adds the ragged-batch bookkeeping.
+    """
+
+    def __init__(self, spheres, n: tuple[int, ...], nbands: int,
+                 tin: DistTensor, tout: DistTensor, *, inverse: bool,
+                 backend: str = "matmul",
+                 pairs: list[tuple[str, str]] | None = None,
+                 policy: ExecPolicy | None = None,
+                 plan: FftPlan | None = None):
+        self.spheres = list(spheres)
+        self.n = tuple(n)
+        self.nbands = int(nbands)
+        self.is_inverse = inverse
+        self.backend = backend
+        self.tin, self.tout = tin, tout
+        self.grid = tin.grid
+        self.policy = policy if policy is not None else ExecPolicy()
+        if pairs is None:
+            pairs = list(zip(tin.dims[-3:], tout.dims[-3:]))
+        if plan is None:
+            plan = FftPlan(tin, tout, pairs, inverse=inverse,
+                           backend=backend, policy=self.policy)
+        self.plan = plan
+        idx, valid = padded_pack_tables(self.spheres)
+        self._pad_idx = jnp.asarray(idx)
+        # validity is fully baked into the dump/zero slots of _pad_idx;
+        # the mask is kept host-side for introspection/tests only
+        self._valid = valid
+        self.npacked_max = int(idx.shape[1])
+
+    # ------------------------------------------------------------- queries
+    @property
+    def nk(self) -> int:
+        return len(self.spheres)
+
+    @property
+    def extents(self) -> tuple[int, ...]:
+        return self.spheres[0].extents
+
+    @property
+    def padding_fraction(self) -> float:
+        """Fraction of the (nk, npacked_max) lanes that are padding."""
+        used = sum(s.npacked for s in self.spheres)
+        return 1.0 - used / float(self.nk * self.npacked_max)
+
+    # ------------------------------------------------------------- execute
+    def _execute(self, x, pol: ExecPolicy):
+        return self.plan._execute(x, pol)
+
+    @property
+    def stages(self):
+        return self.plan.stages
+
+    @property
+    def dims(self):
+        return self.plan.dims
+
+    @property
+    def fft_pairs(self):
+        return self.plan.fft_pairs
+
+    # ------------------------------------------------------------- mirrors
+    def _mirror(self, plan: FftPlan) -> "StackedPlaneWaveFFT":
+        return StackedPlaneWaveFFT(self.spheres, self.n, self.nbands,
+                                   self.tout, self.tin,
+                                   inverse=not self.is_inverse,
+                                   backend=self.backend,
+                                   pairs=plan.fft_pairs,
+                                   policy=self.policy, plan=plan)
+
+    def _derive_inverse(self) -> "StackedPlaneWaveFFT":
+        return self._mirror(self.plan.inverse())
+
+    def _derive_adjoint(self) -> "StackedPlaneWaveFFT":
+        return self._mirror(self.plan.adjoint())
+
+    # ----------------------------------------------- ragged stack helpers
+    def stack(self, blocks):
+        """Per-k ``(nbands, npacked_k)`` blocks → ``(nk·nbands, npacked_max)``.
+
+        Ragged tails are zero-padded — matching the pack/unpack contract
+        that padded lanes hold zeros.  One pad per block plus a single
+        concatenate (linear in the total coefficient count); the padded
+        blocks are pinned to one replicated placement first
+        (``ProcGrid.replicate``) because eager concatenates over
+        mixed-placement operands miscompute on some jax versions.
+        """
+        if len(blocks) != self.nk:
+            raise ValueError(f"{len(blocks)} blocks for {self.nk} spheres")
+        pads = [self.grid.replicate(
+                    jnp.pad(c, ((0, 0), (0, self.npacked_max - c.shape[-1]))))
+                for c in blocks]
+        return jnp.concatenate(pads, axis=0)
+
+    def split(self, padded):
+        """``(nk·nbands, npacked_max)`` → per-k ``(nbands, npacked_k)``."""
+        c = padded.reshape(self.nk, self.nbands, self.npacked_max)
+        return [c[ik, :, :s.npacked] for ik, s in enumerate(self.spheres)]
+
+    # ------------------------------------------------- sphere pack/unpack
+    def unpack(self, padded):
+        """``(nk·nbands, npacked_max)`` coefficients → ``(nk·nbands, d³)``.
+
+        Each k-block scatters through its own pack table; padded lanes land
+        in the dump slot and are dropped, so garbage there never reaches
+        the bounding cube.
+        """
+        d = self.extents
+        cells = math.prod(d)
+        c = padded.reshape(self.nk, self.nbands, self.npacked_max)
+        flat = jnp.zeros((self.nk, self.nbands, cells + 1), padded.dtype)
+        kk = jnp.arange(self.nk)[:, None, None]
+        bb = jnp.arange(self.nbands)[None, :, None]
+        flat = flat.at[kk, bb, self._pad_idx[:, None, :]].set(c)
+        return flat[..., :cells].reshape((self.nk * self.nbands,) + d)
+
+    def pack(self, cube):
+        """``(nk·nbands, d, d, d)`` cubes → ``(nk·nbands, npacked_max)``.
+
+        Padded lanes gather from the zero slot — they come out exactly
+        zero, whatever the cube holds.
+        """
+        d = self.extents
+        cells = math.prod(d)
+        flat = cube.reshape(self.nk, self.nbands, cells)
+        flat = jnp.concatenate([flat, jnp.zeros_like(flat[..., :1])], -1)
+        kk = jnp.arange(self.nk)[:, None, None]
+        bb = jnp.arange(self.nbands)[None, :, None]
+        out = flat[kk, bb, self._pad_idx[:, None, :]]
+        return out.reshape(self.nk * self.nbands, self.npacked_max)
+
+    # ---------------------------------------------------------- accounting
+    def private_bytes(self) -> int:
+        """The ragged pack tables are per-sphere-set — never shared."""
+        return (int(self._pad_idx.nbytes) + int(self._valid.nbytes)
+                + super().private_bytes())
+
+    def describe(self) -> str:
+        return ("StackedPlaneWaveFFT %d spheres d=%d -> grid n=%d "
+                "(npacked_max=%d, padding %.1f%%)\n" %
+                (self.nk, self.extents[0], self.n[0], self.npacked_max,
+                 100 * self.padding_fraction)) + self.plan.describe()
+
+
+def make_stacked_planewave_pair(grid, n: int, spheres, nbands: int, *,
+                                backend: str = "matmul",
+                                batch_axes: tuple[int, ...] = (),
+                                fft_axes: tuple[int, ...] | None = None,
+                                policy: ExecPolicy | None = None,
+                                plan: FftPlan | None = None
+                                ) -> tuple["StackedPlaneWaveFFT",
+                                           "StackedPlaneWaveFFT"]:
+    """(inverse, forward) ragged-batch stacked pair over nk·nbands orbitals.
+
+    Layouts match :func:`make_planewave_pair` with the batch dim widened to
+    ``nk·nbands`` and the sphere side opened to the shared d³ bounding box
+    (the raggedness lives in the pack tables, not the plan).  Pass ``plan=``
+    to wrap an already-built (cached) d³→n³ inverse ``FftPlan`` — e.g. the
+    density build's stacked plan — instead of constructing a second one.
+    """
+    spheres = list(spheres)
+    if fft_axes is None:
+        fft_axes = tuple(a for a in range(grid.ndim) if a not in batch_axes)
+    nk = len(spheres)
+    ext = spheres[0].extents
+    if plan is not None:
+        tin, tout = plan.tin, plan.tout
+    else:
+        bdom = Domain((0,), (nk * nbands - 1,))
+        bbox = Domain((0, 0, 0), tuple(e - 1 for e in ext))
+        cube = Domain((0, 0, 0), (n - 1, n - 1, n - 1))
+        in_s, out_s = planewave_spec(
+            tuple(batch_axes), tuple(fft_axes)).split(" -> ")
+        tin = DistTensor.create((bdom, bbox), in_s, grid)
+        tout = DistTensor.create((bdom, cube), out_s, grid)
+    inv = StackedPlaneWaveFFT(spheres, (n, n, n), nbands, tin, tout,
+                              inverse=True, backend=backend, policy=policy,
+                              plan=plan)
     return inv, inv.inverse()

@@ -23,7 +23,8 @@ Quickstart::
 from .basis import CUBE_SPEC, PW_SPEC, PlaneWaveBasis
 from .density import density_from_orbitals
 from .hamiltonian import (apply_hamiltonian, apply_hamiltonian_pipelined,
-                          update_bands, update_bands_all_k)
+                          apply_hamiltonian_stacked, update_bands,
+                          update_bands_all_k)
 from .hartree import HartreeSolver, coulomb_kernel
 from .potentials import gaussian_wells, lda_exchange
 from .scf import (AndersonMixer, LinearMixer, SCFConfig, SCFResult, run_scf,
@@ -31,7 +32,8 @@ from .scf import (AndersonMixer, LinearMixer, SCFConfig, SCFResult, run_scf,
 
 __all__ = [
     "PlaneWaveBasis", "PW_SPEC", "CUBE_SPEC", "density_from_orbitals",
-    "apply_hamiltonian", "apply_hamiltonian_pipelined", "update_bands",
+    "apply_hamiltonian", "apply_hamiltonian_pipelined",
+    "apply_hamiltonian_stacked", "update_bands",
     "update_bands_all_k", "HartreeSolver", "coulomb_kernel",
     "gaussian_wells", "lda_exchange", "SCFConfig", "SCFResult", "run_scf",
     "total_energy", "LinearMixer", "AndersonMixer",

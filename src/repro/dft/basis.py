@@ -35,7 +35,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (Domain, ProcGrid, SphereDomain, cube_spec, fftb,
+                        global_plan_cache, make_stacked_planewave_pair,
                         planewave_spec)
+from repro.core.cache import domains_key, grid_key
 from repro.core.policy import ExecPolicy
 
 #: sphere bounding-cube (bands, x, y, z) → real-space cube, x/Z sharded
@@ -154,12 +156,14 @@ class PlaneWaveBasis:
 
     @property
     def stacks_k(self) -> bool:
-        """True when the density build stacks k-points into the batch dim.
+        """True when k-points stack into the transforms' batch dimension.
 
         On a (batch × fft) grid with nk dividing the batch-axis size, the
         nk·nbands stacked batch splits evenly over the batch axes, so
-        k-points (not just bands) are sharded — the ISSUE's "shard bands
-        and k-points over the batch axis" configuration.
+        k-points (not just bands) are sharded.  Both the density build and
+        the Hamiltonian apply route through the stacked plans then — one
+        batched transform per direction instead of nk per-k dispatches
+        (the pipelined per-k path remains as the fallback and oracle).
         """
         return (bool(self.batch_axes) and self.nk > 1
                 and self.batch_procs > 1
@@ -219,6 +223,31 @@ class PlaneWaveBasis:
             self._pw_spec, domains=(bdom, bbox), grid=self.grid,
             sizes=(self.n,) * 3, inverse=True, backend=self.backend,
             policy=self.policy)
+
+    def stacked_hamiltonian_plans(self):
+        """(inverse, forward) ragged-batch stacked pair for the H apply.
+
+        One ``StackedPlaneWaveFFT`` pair batching all nk·nbands orbitals:
+        each k-point's packed coefficients are padded to ``npacked_max``
+        with the per-k validity baked into the pack/unpack index tables,
+        so the whole Hamiltonian sweep is two batched distributed
+        transforms regardless of nk and nbands.  Served from the
+        process-global PlanCache keyed by the full sphere set; the inner
+        d³→n³ plan is :meth:`stacked_inverse_plan` — shared (object
+        identity and cache accounting alike) with the density build.
+        """
+        cache = global_plan_cache()
+        key = ("stacked-pw", self._pw_spec,
+               domains_key(tuple(self.spheres)), (self.nk, self.nbands),
+               grid_key(self.grid), (self.n,) * 3, self.backend,
+               self.policy)
+        inv = cache.get_or_build(
+            key, lambda: make_stacked_planewave_pair(
+                self.grid, self.n, self.spheres, self.nbands,
+                backend=self.backend, batch_axes=self.batch_axes,
+                fft_axes=self.fft_axes, policy=self.policy,
+                plan=self.stacked_inverse_plan())[0])
+        return inv, inv.inverse()   # mirror is memoized on the plan
 
     def cube_plans(self):
         """(forward, inverse) full-cube pair for density/potential fields."""

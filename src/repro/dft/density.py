@@ -12,10 +12,11 @@ they come out of the plans — z-sharded on a multi-device grid — so the sum
 over bands and k-points never gathers the mesh.
 
 On a (batch × fft) 2D grid where ``nk`` divides the batch-axis size
-(``basis.stacks_k``), all k-points' bounding cubes are stacked into one
-batch of nk·nbands and pushed through a *single* staged-padding transform
-(``basis.stacked_inverse_plan()``): the batch axes then shard k-points and
-bands jointly, and nk per-k dispatches collapse into one.
+(``basis.stacks_k``), all k-points' padded coefficients are stacked into
+one ragged batch of nk·nbands and pushed through a *single* staged-padding
+transform (``basis.stacked_hamiltonian_plans()`` — the same pair the
+stacked H apply uses): the batch axes then shard k-points and bands
+jointly, and nk per-k dispatches collapse into one.
 """
 from __future__ import annotations
 
@@ -25,12 +26,14 @@ import jax.numpy as jnp
 
 
 def _density_stacked(basis, coeffs, occ) -> jnp.ndarray:
-    """One nk·nbands-batched transform; k and bands shard the batch axes."""
-    cubes = []
-    for ik, c in enumerate(coeffs):
-        inv, _ = basis.plans_for_k(ik)         # pack tables stay per-sphere
-        cubes.append(inv.unpack(c))
-    psi = basis.stacked_inverse_plan()(jnp.concatenate(cubes, axis=0))
+    """One nk·nbands-batched transform; k and bands shard the batch axes.
+
+    Rides the same ragged ``StackedPlaneWaveFFT`` pair as the stacked
+    Hamiltonian apply (padded per-k pack tables, shared d³→n³ plan), so
+    the stacked SCF path never needs the per-k sphere plans at all.
+    """
+    inv, _ = basis.stacked_hamiltonian_plans()
+    psi = inv(inv.unpack(inv.stack(coeffs)))
     w = (basis.weights[:, None] * occ).reshape(-1).astype(np.float32)
     return jnp.tensordot(jnp.asarray(w), jnp.abs(psi) ** 2, axes=(0, 0))
 

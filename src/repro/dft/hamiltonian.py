@@ -1,4 +1,4 @@
-"""Kohn-Sham Hamiltonian apply + band updates, per k-point.
+"""Kohn-Sham Hamiltonian apply + band updates — per k-point or k-stacked.
 
 H is applied in the packed sphere basis:
 
@@ -9,6 +9,10 @@ batched sphere→cube→sphere round-trip (inverse plan, pointwise multiply,
 derived forward plan).  Bands ride the plans' batch dimension, so one H
 apply per k-point is two batched distributed transforms regardless of the
 band count — the matrix-matrix form the paper's batching argument is about.
+When the basis stacks k-points (``basis.stacks_k``) the argument extends
+across k: :func:`apply_hamiltonian_stacked` pushes *all* nk·nbands
+orbitals through one ragged padded batch, so the whole sweep is two
+distributed transforms regardless of nk as well.
 
 The band update is preconditioned all-band descent in its locally-optimal
 form (LOBPCG without the history block): each step does a Rayleigh-Ritz
@@ -20,6 +24,21 @@ automatically.  The preconditioner is the Teter-style kinetic damping
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def _replicated(basis, x):
+    """Pin an eager coefficient block onto the basis mesh, replicated.
+
+    The band update mixes shard_map outputs (packed H·c blocks, sharded
+    over the batch axes) with replicated/single-device blocks (QR and
+    Rayleigh-Ritz outputs) in eager concatenates and matmuls — exactly
+    the mixed-placement situation ``ProcGrid.replicate`` exists for
+    (reported eigenvalues came out doubled on a 2×2 grid before every
+    block was pinned; the eigenvectors survived only because a uniform
+    scaling has the same eigenbasis).  No-op on a 1-device grid, so
+    results there are bitwise unchanged.
+    """
+    return basis.grid.replicate(x)
 
 
 def apply_hamiltonian(basis, ik: int, c, v_eff):
@@ -72,6 +91,35 @@ def apply_hamiltonian_pipelined(basis, blocks, v_eff):
     return out
 
 
+def apply_hamiltonian_stacked(basis, blocks, v_eff):
+    """H·c for *all* k-points in one ragged stacked batch.
+
+    The pipelined path still dispatches one sphere→cube→sphere round trip
+    per k-point; here every k-point's bands ride a single
+    ``(nk·nbands, npacked_max)`` padded batch through the basis's
+    ``StackedPlaneWaveFFT`` pair: **one** batched inverse transform, one
+    cube-space ``v_eff`` multiply, one batched forward — two distributed
+    transforms per H sweep regardless of nk and nbands.  Raggedness
+    (distinct ``npacked_k``) is absorbed by the padded pack tables, whose
+    dump/zero slots keep padded lanes inert; the kinetic diagonal is
+    applied per k on the unpadded blocks.  Per-orbital math is identical
+    to :func:`apply_hamiltonian` — same rectangular DFT stages, same
+    pack/unpack values — so stacked ≡ pipelined ≡ serial per k.
+
+    ``blocks``: list of (nbands, npacked_k) coefficient blocks, one per k.
+    Returns the list of H·c blocks in k order.
+    """
+    nk = len(blocks)
+    if nk == 0:
+        return []
+    inv, fwd = basis.stacked_hamiltonian_plans()
+    psi = inv(inv.unpack(inv.stack(blocks)))  # every k and band at once
+    vpsi = fwd(psi * v_eff)                   # apply V, truncate back
+    vc = inv.split(inv.pack(vpsi))
+    return [basis.kinetic(ik)[None, :] * blocks[ik] + vc[ik]
+            for ik in range(nk)]
+
+
 def orthonormalize(c):
     """QR re-orthonormalization; bands are rows of c."""
     q, r = jnp.linalg.qr(c.T)
@@ -99,11 +147,12 @@ def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
     pre = (1.0 / (1.0 + kin))[None, :]
     napply = 0
     eps = None
+    c = _replicated(basis, c)
     for _ in range(steps):
-        hc = apply_hamiltonian(basis, ik, c, v_eff)
+        hc = _replicated(basis, apply_hamiltonian(basis, ik, c, v_eff))
         napply += 1
-        d = _descent_direction(c, hc, pre)
-        hd = apply_hamiltonian(basis, ik, d, v_eff)
+        d = _replicated(basis, _descent_direction(c, hc, pre))
+        hd = _replicated(basis, apply_hamiltonian(basis, ik, d, v_eff))
         napply += 1
         c, eps = _rayleigh_ritz(c, d, hc, hd)
     return c, eps, napply
@@ -126,31 +175,42 @@ def _rayleigh_ritz(c, d, hc, hd):
     return orthonormalize(vecs[:, :nb].T @ basis_block), eps[:nb]
 
 
-def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3):
-    """Pipelined locally-optimal band update across *every* k-point.
+def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3,
+                       stacked: bool | None = None):
+    """All-k locally-optimal band update — stacked or pipelined H sweeps.
 
     The per-k math is :func:`update_bands` exactly — same preconditioner,
     same Rayleigh-Ritz step, same op order within each k — but the loop
     nest is inverted (steps outer, k inner) so each step's two H-apply
-    sweeps go through :func:`apply_hamiltonian_pipelined`: k+1's
-    sphere→cube all_to_alls are dispatched before k's cube-space potential
-    apply.  Because no arithmetic crosses k-points, the results are
-    bitwise identical to running ``update_bands`` serially per k.
+    sweeps cover every k-point at once.  ``stacked=None`` (the default)
+    routes each sweep through :func:`apply_hamiltonian_stacked` when
+    ``basis.stacks_k`` — one ragged nk·nbands batch, two distributed
+    transforms per sweep — and falls back to
+    :func:`apply_hamiltonian_pipelined` (k+1's sphere→cube all_to_alls
+    dispatched before k's potential apply) otherwise; pass True/False to
+    force a path, e.g. to use the pipelined loop as the equivalence
+    oracle.  Because no arithmetic crosses k-points, both routes match
+    running ``update_bands`` serially per k.
 
     Returns (new coefficient blocks, eigenvalues list [(nbands,)] per k,
-    pipelined H sweeps executed — each sweep is one H apply per k-point).
+    H sweeps executed — each sweep is one H apply per k-point).
     """
     nk = len(coeffs)
-    cs = list(coeffs)
+    if stacked is None:
+        stacked = bool(getattr(basis, "stacks_k", False))
+    sweep = apply_hamiltonian_stacked if stacked \
+        else apply_hamiltonian_pipelined
+    cs = [_replicated(basis, c) for c in coeffs]
     pres = [(1.0 / (1.0 + basis.kinetic(ik)))[None, :] for ik in range(nk)]
     eps_out = [None] * nk
     nsweep = 0
     for _ in range(steps):
-        hcs = apply_hamiltonian_pipelined(basis, cs, v_eff)
+        hcs = [_replicated(basis, hc) for hc in sweep(basis, cs, v_eff)]
         nsweep += 1
-        ds = [_descent_direction(cs[ik], hcs[ik], pres[ik])
+        ds = [_replicated(basis,
+                          _descent_direction(cs[ik], hcs[ik], pres[ik]))
               for ik in range(nk)]
-        hds = apply_hamiltonian_pipelined(basis, ds, v_eff)
+        hds = [_replicated(basis, hd) for hd in sweep(basis, ds, v_eff)]
         nsweep += 1
         for ik in range(nk):
             cs[ik], eps_out[ik] = _rayleigh_ritz(cs[ik], ds[ik],

@@ -117,6 +117,9 @@ class SCFConfig:
     mix_warmup: int = 2               # linear iterations before Anderson
     seed: int = 0
     pipeline: bool = True             # double-buffer the per-k transforms
+    stack_k: bool | None = None       # ragged-stack the H apply across k
+                                      # (None: auto via basis.stacks_k;
+                                      # True requires pipeline=True)
     batch_axes: tuple | None = None   # grid axes carrying the band batch
     fft_axes: tuple | None = None     # grid axes carrying the transforms
     policy: ExecPolicy | None = None
@@ -137,6 +140,8 @@ class SCFResult:
     seconds: float
     cache_stats: dict                 # global PlanCache counters (delta)
     grid_shape: tuple = ()            # processing-grid shape the run used
+    stacked: bool = False             # H sweeps rode the k-stacked batch
+    padding_fraction: float = 0.0     # padded lanes / (nk · npacked_max)
 
     @property
     def transforms_per_s(self) -> float:
@@ -207,6 +212,16 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
     occ[:, :nocc] = 1.0
     nelec = float(basis.weights.sum() * nocc)
 
+    # route the H sweeps through the ragged k-stacked batch when the grid
+    # supports it (or the caller forces it); pipelined per-k is the fallback
+    stack_k = basis.stacks_k if cfg.stack_k is None else bool(cfg.stack_k)
+    if cfg.stack_k and not cfg.pipeline:
+        # stacking IS an all-k sweep — the serial per-k branch cannot
+        # honor it, and silently dropping a forced route would lie
+        raise ValueError("stack_k=True requires pipeline=True (the "
+                         "stacked route sweeps all k-points per step; "
+                         "pipeline=False runs the serial per-k loop)")
+
     coeffs = _init_coefficients(basis, cfg.seed)
     rho = density_from_orbitals(basis, coeffs, occ)
     mixer = AndersonMixer(cfg.mix_alpha, cfg.mix_history, cfg.mix_warmup) \
@@ -229,11 +244,12 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
             _, v_x = lda_exchange(rho)
             v_eff = v_eff + v_x
         if cfg.pipeline:
-            # pipelined k-loop: each inner step sweeps every k-point with
-            # k+1's sphere→cube comm dispatched before k's potential apply
-            # — per-k math identical to the serial branch below
+            # all-k loop: stacked H sweeps (one ragged nk·nbands batch)
+            # when the basis stacks k-points, pipelined per-k dispatch
+            # otherwise — per-k math identical to the serial branch below
             coeffs, eps_list, nsweep = update_bands_all_k(
-                basis, coeffs, v_eff, steps=cfg.inner_steps)
+                basis, coeffs, v_eff, steps=cfg.inner_steps,
+                stacked=stack_k)
             for ik in range(basis.nk):
                 eigs[ik] = np.asarray(eps_list[ik])
             transforms += nsweep * basis.nk * 2 * basis.nbands
@@ -270,9 +286,13 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
     # guess) — coeffs are unchanged since the loop's last rho_out
     rho = rho_out if energies else density_from_orbitals(basis, coeffs, occ)
     assert abs(electron_count(basis, rho) - nelec) < 1e-3 * max(nelec, 1.0)
+    stacked = bool(stack_k and cfg.pipeline)
+    padding = (basis.stacked_hamiltonian_plans()[0].padding_fraction
+               if stacked else 0.0)
     return SCFResult(
         converged=converged, iterations=len(energies),
         energy=energies[-1] if energies else float("nan"),
         energies=energies, residuals=residuals, eigenvalues=eigs, rho=rho,
         transforms=transforms, seconds=seconds, cache_stats=delta,
-        grid_shape=tuple(basis.grid.shape))
+        grid_shape=tuple(basis.grid.shape), stacked=stacked,
+        padding_fraction=padding)

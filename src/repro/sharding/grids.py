@@ -11,8 +11,11 @@ examples and services don't each hand-roll mesh shapes:
     transpose, biggest messages);
   * more devices → (batch, fft) 2D grid with the largest fft factor that
     keeps per-device pencils thick, the rest of the machine on the batch
-    axis — provided the band count (or ``nk·nbands``, the k-stacked
-    density batch) divides it.
+    axis — provided the band count divides it, and preferring splits whose
+    batch factor also carries the ``nk·nbands`` *stacked* batch (since the
+    Hamiltonian apply and the density build both ride one ragged
+    k-stacked transform when ``basis.stacks_k``, a k-stackable batch axis
+    is worth more than a marginally larger fft factor).
 """
 from __future__ import annotations
 
@@ -35,10 +38,12 @@ def choose_dft_grid_shape(ndevices: int, *, nbands: int, diameter: int,
     rule) whose batch factor ``pb = ndevices // pf`` divides ``nbands`` —
     the per-k sphere plans always batch exactly ``nbands`` bands, so this
     is a hard ``PlaneWaveBasis`` requirement.  Among qualifying splits,
-    one whose ``pb`` is also divisible by ``nk`` is preferred (it unlocks
-    the k-stacked density batch, ``basis.stacks_k``).  Falls back to
-    ``(ndevices,)`` when no split qualifies (the basis's own divisibility
-    checks then produce the actionable error).
+    one that satisfies the full ``basis.stacks_k`` contract — ``nk | pb``
+    and ``pb | nk·nbands``, so the stacked nk·nbands Hamiltonian/density
+    batch shards evenly — is preferred (it collapses every per-k dispatch
+    into one ragged batched transform).  Falls back to ``(ndevices,)``
+    when no split qualifies (the basis's own divisibility checks then
+    produce the actionable error).
     """
     if ndevices < 1:
         raise ValueError(f"ndevices must be >= 1, got {ndevices}")
@@ -54,7 +59,10 @@ def choose_dft_grid_shape(ndevices: int, *, nbands: int, diameter: int,
             return (pf,)                  # whole machine fits on fft axes
         if nbands % pb == 0:
             valid.append((pb, pf))
-    for pb, pf in valid:                  # prefer k-stackable batch axes
+    for pb, pf in valid:                  # prefer k-stackable batch axes:
+        # nk | pb puts whole k-points on each shard; pb | nk·nbands (the
+        # stacked H/density batch) already follows from pb | nbands above,
+        # so this is the full basis.stacks_k contract
         if nk > 1 and pb % nk == 0:
             return (pb, pf)
     if valid:

@@ -1,5 +1,6 @@
-"""Perf-trajectory gate plumbing: compare.py verdicts, atomic JSON writes,
-and the scf-2d grid-shape picker — pure-python, no transforms executed."""
+"""Perf-trajectory gate plumbing: compare.py verdicts (including the
+unknown-scenario skip), atomic JSON writes, and the scf-2d / scf-stacked
+grid-shape pickers — pure-python, no transforms executed."""
 import json
 import os
 import sys
@@ -12,7 +13,9 @@ if REPO not in sys.path:
 
 from benchmarks.compare import compare_records  # noqa: E402
 from benchmarks.compare import main as compare_main  # noqa: E402
-from benchmarks.run import atomic_json_dump, scf_2d_grid_shape  # noqa: E402
+from benchmarks.compare import unknown_scenarios  # noqa: E402
+from benchmarks.run import (atomic_json_dump,  # noqa: E402
+                            scf_2d_grid_shape, scf_stacked_grid_shape)
 
 
 def _record(tps=200.0, grid=(4,), converged=True, devices=4):
@@ -56,12 +59,39 @@ def test_gate_fails_on_config_mismatch():
     cur2 = {"scf": _record(250.0, devices=8)}
     assert any("scenario changed" in f
                for f in compare_records(cur2, base))
+    # route fields gate too: a scenario that switched from the pipelined
+    # to the stacked H apply is a different configuration, not a speedup
+    base3 = {"scf-2d": dict(_record(grid=(2, 2)), stacked=False)}
+    cur3 = {"scf-2d": dict(_record(400.0, grid=(2, 2)), stacked=True)}
+    assert any("stacked changed" in f
+               for f in compare_records(cur3, base3))
 
 
 def test_gate_extra_current_scenarios_are_fine():
+    """A scenario absent from the baseline (e.g. freshly added scf-stacked)
+    is reported by unknown_scenarios and skipped — never a KeyError, never
+    a failure; regressions in known scenarios still gate."""
     base = {"scf": _record()}
-    cur = {"scf": _record(), "scf-2d": _record(grid=(2, 2))}
+    cur = {"scf": _record(),
+           "scf-stacked": _record(400.0, grid=(2, 2))}
     assert compare_records(cur, base) == []
+    assert unknown_scenarios(cur, base) == ["scf-stacked"]
+    # a regression in a *known* scenario still fails despite the extras
+    cur_bad = dict(cur, scf=_record(100.0))
+    assert any("regressed" in f for f in compare_records(cur_bad, base))
+    assert unknown_scenarios(cur_bad, base) == ["scf-stacked"]
+
+
+def test_gate_missing_tps_is_failure_not_keyerror():
+    """Hand-edited or legacy records without transforms_per_s must produce
+    an actionable gate failure, not an uncaught KeyError."""
+    base = {"scf": _record()}
+    broken = _record()
+    del broken["transforms_per_s"]
+    failures = compare_records({"scf": broken}, base)
+    assert any("transforms_per_s" in f for f in failures)
+    failures = compare_records({"scf": _record()}, {"scf": broken})
+    assert any("transforms_per_s" in f for f in failures)
 
 
 # --------------------------------------------------------------- CLI paths
@@ -78,6 +108,23 @@ def test_compare_main_exit_codes(tmp_path, capsys):
     _dump(cur, {"scf": _record(100.0)})
     assert compare_main([str(cur), str(base)]) == 1
     assert "PERF GATE FAILED" in capsys.readouterr().out
+
+
+def test_compare_main_unknown_scenario_warns_and_passes(tmp_path, capsys):
+    """CLI path for the scf-stacked-before-baseline-refresh situation:
+    exit 0 with a visible skip warning, not a crash or a failure."""
+    cur, base = tmp_path / "cur.json", tmp_path / "base.json"
+    _dump(cur, {"scf": _record(200.0),
+                "scf-stacked": _record(400.0, grid=(2, 2))})
+    _dump(base, {"scf": _record(210.0)})
+    assert compare_main([str(cur), str(base)]) == 0
+    out = capsys.readouterr().out
+    assert "WARNING: scf-stacked" in out and "skipped" in out
+    assert "perf gate passed" in out
+    # the unknown scenario never masks a real regression in a known one
+    _dump(cur, {"scf": _record(100.0),
+                "scf-stacked": _record(400.0, grid=(2, 2))})
+    assert compare_main([str(cur), str(base)]) == 1
 
 
 def test_compare_main_update_baseline(tmp_path):
@@ -130,3 +177,13 @@ def test_scf_2d_grid_shape_splits():
     assert scf_2d_grid_shape(6) is None          # batch factor 3 ∤ 4
     assert scf_2d_grid_shape(12) is None
     assert scf_2d_grid_shape(16) is None         # pencil rule caps pf at 2
+
+
+def test_scf_stacked_grid_shape_requires_stackable_batch():
+    """scf-stacked runs only where basis.stacks_k will hold — the batch
+    factor must carry whole k-points and divide the nk·nbands batch."""
+    assert scf_stacked_grid_shape(4) == (2, 2)   # pb=2: 2|2·4, 2%2==0
+    assert scf_stacked_grid_shape(8) == (4, 2)   # pb=4: 4|8, 4%2==0
+    assert scf_stacked_grid_shape(1) is None
+    assert scf_stacked_grid_shape(2) is None     # no 2D split at all
+    assert scf_stacked_grid_shape(6) is None     # scf-2d infeasible too

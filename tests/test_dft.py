@@ -6,12 +6,13 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import (FftPlan, PlaneWaveFFT, ProcGrid, SphereDomain,
-                        global_plan_cache)
+                        StackedPlaneWaveFFT, global_plan_cache)
 from repro.dft import (HartreeSolver, PlaneWaveBasis, SCFConfig,
                        density_from_orbitals, run_scf)
 from repro.dft.density import electron_count
 from repro.dft.hamiltonian import (apply_hamiltonian,
                                    apply_hamiltonian_pipelined,
+                                   apply_hamiltonian_stacked,
                                    orthonormalize, update_bands,
                                    update_bands_all_k)
 from repro.dft.scf import AndersonMixer
@@ -245,6 +246,111 @@ def test_scf_pipeline_flag_equivalent(basis2):
     assert float(jnp.abs(a.rho - b.rho).max()) < 1e-10
 
 
+# ------------------------------------------------------ stacked k batches
+def test_stacked_hamiltonian_matches_pipelined_and_serial(basis2):
+    """Acceptance: stacked ≡ pipelined ≡ serial H apply on ragged spheres
+    (distinct npacked_k per k-point) — the stacked route pads each k to
+    npacked_max but must reproduce the per-k math to 1e-10."""
+    assert basis2.npacked(0) != basis2.npacked(1)   # genuinely ragged
+    rng = np.random.default_rng(11)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    blocks = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    stacked = apply_hamiltonian_stacked(basis2, blocks, v)
+    piped = apply_hamiltonian_pipelined(basis2, blocks, v)
+    for ik in range(basis2.nk):
+        ref = apply_hamiltonian(basis2, ik, blocks[ik], v)
+        assert stacked[ik].shape == ref.shape       # unpadded per-k block
+        assert float(jnp.abs(stacked[ik] - ref).max()) < 1e-10
+        assert float(jnp.abs(piped[ik] - ref).max()) < 1e-10
+
+
+def test_stacked_plans_cached_and_shared_with_density(basis2):
+    """The stacked pair is one PlanCache entry; its inner d³→n³ plan IS
+    the density build's stacked plan (object identity, no re-search)."""
+    cache = global_plan_cache()
+    inv, fwd = basis2.stacked_hamiltonian_plans()
+    assert isinstance(inv, StackedPlaneWaveFFT)
+    assert inv.plan is basis2.stacked_inverse_plan()
+    assert fwd.plan is inv.plan.inverse()
+    hits = cache.stats["hits"]
+    searches = FftPlan.searches
+    inv2, fwd2 = basis2.stacked_hamiltonian_plans()
+    assert inv2 is inv and fwd2 is fwd
+    assert cache.stats["hits"] > hits
+    assert FftPlan.searches == searches
+
+
+def test_stacked_padded_lanes_never_leak(basis2):
+    """Garbage written into the padded lanes must not reach the packed
+    outputs: unpack routes padded lanes to the dump slot, pack reads them
+    from the zero slot."""
+    inv, fwd = basis2.stacked_hamiltonian_plans()
+    assert inv.padding_fraction > 0.0               # ragged ⇒ real padding
+    rng = np.random.default_rng(12)
+    blocks = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    stacked = jnp.asarray(inv.stack(blocks))
+    valid = np.zeros((basis2.nk, inv.npacked_max), bool)
+    for ik in range(basis2.nk):
+        valid[ik, :basis2.npacked(ik)] = True
+    lanes = np.repeat(valid, basis2.nbands, axis=0)  # (nk·nb, npmax)
+    garbage = jnp.where(jnp.asarray(lanes), stacked,
+                        jnp.asarray(1e6 + 1e6j, stacked.dtype))
+    # unpack: padded-lane garbage lands in the dump slot, not the cube
+    assert float(jnp.abs(inv.unpack(garbage)
+                         - inv.unpack(stacked)).max()) == 0.0
+    # pack after a round trip: padded lanes come out exactly zero
+    out = np.asarray(inv.pack(fwd(inv(inv.unpack(garbage)))))
+    assert np.abs(out[~lanes]).max() == 0.0
+    # and the valid lanes round-trip to the inputs (forward ∘ inverse ≈ id)
+    np.testing.assert_allclose(out[lanes], np.asarray(stacked)[lanes],
+                               rtol=1e-3, atol=2e-5)
+
+
+def test_stacked_band_update_matches_serial(basis2):
+    """update_bands_all_k(stacked=True) reproduces the serial per-k path
+    to 1e-10 — eigenvalues, coefficients, and the resulting density."""
+    rng = np.random.default_rng(13)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    coeffs = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    serial, serial_eps = [], []
+    for ik in range(basis2.nk):
+        c, eps, _ = update_bands(basis2, ik, coeffs[ik], v, steps=3)
+        serial.append(c)
+        serial_eps.append(eps)
+    stacked, stacked_eps, _ = update_bands_all_k(basis2, coeffs, v,
+                                                 steps=3, stacked=True)
+    for ik in range(basis2.nk):
+        assert float(jnp.abs(stacked[ik] - serial[ik]).max()) < 1e-10
+        assert float(jnp.abs(stacked_eps[ik]
+                             - serial_eps[ik]).max()) < 1e-10
+    occ = np.ones((basis2.nk, basis2.nbands))
+    rho_s = density_from_orbitals(basis2, serial, occ)
+    rho_k = density_from_orbitals(basis2, stacked, occ)
+    assert float(jnp.abs(rho_k - rho_s).max()) < 1e-10
+
+
+def test_scf_stack_k_flag_equivalent(basis2):
+    """run_scf(stack_k=True) ≡ run_scf(stack_k=False): forcing the ragged
+    stacked H sweeps changes dispatch, not results — the pipelined path
+    stays available as the equivalence oracle."""
+    g1 = basis2.grid
+    cfg = dict(n=16, nbands=3, kpts=KPTS2, max_iter=6, mix_warmup=99)
+    a = run_scf(SCFConfig(**cfg, stack_k=True), grid=g1)
+    b = run_scf(SCFConfig(**cfg, stack_k=False), grid=g1)
+    assert a.stacked and not b.stacked
+    assert a.padding_fraction > 0.0 and b.padding_fraction == 0.0
+    assert a.transforms == b.transforms
+    assert abs(a.energy - b.energy) < 1e-10
+    assert float(jnp.abs(a.rho - b.rho).max()) < 1e-10
+    # forcing the stacked route without the all-k loop is contradictory —
+    # refused loudly rather than silently running serial per-k
+    with pytest.raises(ValueError, match="stack_k=True requires"):
+        run_scf(SCFConfig(**cfg, stack_k=True, pipeline=False), grid=g1)
+
+
 # ---------------------------------------------------------------------- SCF
 def test_scf_converges_two_kpoints_multi_band():
     """Acceptance: 2 k-points × 4 bands converges, energy monotone after
@@ -279,21 +385,26 @@ def test_scf_converges_two_kpoints_multi_band():
 
 def test_scf_2d_grid_4dev(dist):
     """Acceptance: SCF convergence on a 2×2 (batch×fft) grid with 4 forced
-    host devices — bands sharded over the batch axis, k-points stacked into
-    the density transform — plus the pipelined k-loop matching the serial
-    path to 1e-10 and the stacked density matching the per-k reference."""
+    host devices — bands sharded over the batch axis, k-points stacked
+    into the ragged nk·nbands batch for both the density build and the
+    Hamiltonian apply — plus stacked ≡ pipelined ≡ serial H applies and
+    band updates to 1e-10 on the distributed grid."""
     script = """
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import ProcGrid, global_plan_cache
 from repro.dft import PlaneWaveBasis, SCFConfig, run_scf
 from repro.dft.density import density_from_orbitals, electron_count
-from repro.dft.hamiltonian import (orthonormalize, update_bands,
+from repro.dft.hamiltonian import (apply_hamiltonian,
+                                   apply_hamiltonian_pipelined,
+                                   apply_hamiltonian_stacked,
+                                   orthonormalize, update_bands,
                                    update_bands_all_k)
 assert jax.device_count() == 4
 grid = ProcGrid.create([2, 2], ["dft_b", "dft_f"])
 basis = PlaneWaveBasis(16, kpts=((0,0,0),(0.5,0.5,0.5)), nbands=4,
                        grid=grid)
 assert basis.stacks_k
+assert basis.npacked(0) != basis.npacked(1)   # ragged sphere batch
 rng = np.random.default_rng(0)
 coeffs = [orthonormalize(jnp.asarray(
     (rng.standard_normal((4, basis.npacked(ik)))
@@ -313,25 +424,46 @@ ref = ref * jnp.float32(basis.n**3 / basis.dv)
 assert float(jnp.abs(rho - ref).max()) / float(ref.max()) < 1e-5
 assert abs(electron_count(basis, rho) - 4.0) < 1e-3
 
-# pipelined band update == serial band update, and their densities, 1e-10
+# stacked == pipelined == serial H apply on the distributed ragged batch
 v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
-serial = [update_bands(basis, ik, coeffs[ik], v, steps=2)[0]
-          for ik in range(2)]
-piped, _, _ = update_bands_all_k(basis, coeffs, v, steps=2)
+hs = apply_hamiltonian_stacked(basis, coeffs, v)
+hp = apply_hamiltonian_pipelined(basis, coeffs, v)
 for ik in range(2):
-    assert float(jnp.abs(piped[ik] - serial[ik]).max()) < 1e-10
-rho_s = density_from_orbitals(basis, serial, occ)
-rho_p = density_from_orbitals(basis, piped, occ)
-assert float(jnp.abs(rho_p - rho_s).max()) < 1e-10
+    href = apply_hamiltonian(basis, ik, coeffs[ik], v)
+    assert float(jnp.abs(hs[ik] - href).max()) < 1e-10
+    assert float(jnp.abs(hp[ik] - href).max()) < 1e-10
 
-# full SCF on the 2D grid converges to the 1-device reference energy;
-# plans: 2 sphere plans + 1 stacked density plan + 1 cube pair
+# stacked band update == serial band update — coefficients, densities AND
+# eigenvalues (regression: mixed-placement eager linalg used to double the
+# reported Ritz values on multi-device 2D grids; _replicated pins every
+# block before the concatenates/contractions)
+serial, eps_ser = [], []
+for ik in range(2):
+    ck, ek, _ = update_bands(basis, ik, coeffs[ik], v, steps=2)
+    serial.append(ck); eps_ser.append(ek)
+stacked, eps_stk, _ = update_bands_all_k(basis, coeffs, v, steps=2)  # stacks
+for ik in range(2):
+    assert float(jnp.abs(stacked[ik] - serial[ik]).max()) < 1e-10
+    assert float(jnp.abs(eps_stk[ik] - eps_ser[ik]).max()) < 1e-10
+    # Ritz values are the Rayleigh quotients of the returned bands
+    hck = apply_hamiltonian(basis, ik, serial[ik], v)
+    rq = np.sort(np.real(np.asarray(
+        jnp.sum(jnp.conj(serial[ik]) * hck, axis=1))))
+    assert np.abs(rq - np.asarray(eps_ser[ik])).max() < 1e-5
+rho_s = density_from_orbitals(basis, serial, occ)
+rho_k = density_from_orbitals(basis, stacked, occ)
+assert float(jnp.abs(rho_k - rho_s).max()) < 1e-10
+
+# full SCF on the 2D grid converges to the 1-device reference energy and
+# rides the stacked route; everything is pre-built above except the cube
+# pair, so exactly one plan-cache miss remains
 cache = global_plan_cache()
 misses0 = cache.stats["misses"]
 cfg = SCFConfig(n=16, nbands=4, kpts=((0,0,0),(0.5,0.5,0.5)), max_iter=50)
 res = run_scf(cfg, grid=grid)
 assert res.converged, (res.energies, res.residuals)
 assert res.grid_shape == (2, 2)
+assert res.stacked and res.padding_fraction > 0.0
 assert cache.stats["misses"] == misses0 + 1   # only the cube plan is new
 assert abs(res.energy - (-1.9197)) < 5e-3, res.energy
 print("OK", res.iterations, round(res.energy, 5))

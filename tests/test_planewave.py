@@ -1,10 +1,12 @@
-"""Plane-wave sphere transform: CSR offsets, pack/unpack, staged padding."""
+"""Plane-wave sphere transform: CSR offsets, pack/unpack, staged padding,
+ragged k-stacked batches."""
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
 
 from repro.core import (ProcGrid, SphereDomain, make_planewave_pair,
+                        make_stacked_planewave_pair, padded_pack_tables,
                         sphere_for_cutoff)
 
 
@@ -102,6 +104,80 @@ def test_roundtrip_identity_on_sphere(sph16):
     rt = fwd(inv(cube))
     got = np.asarray(inv.pack(inv.mask_cube(rt)))
     np.testing.assert_allclose(got, packed, rtol=1e-3, atol=2e-5)
+
+
+# ------------------------------------------------------ ragged k batches
+def _ragged_spheres():
+    """Two spheres sharing one bounding box with distinct point sets —
+    the k-shifted-center situation the ragged batch layer exists for."""
+    s0 = SphereDomain.from_diameter(8)
+    s1 = SphereDomain(radius=4.0, center=(3.9, 3.9, 3.9), lower=(0, 0, 0),
+                      upper=(7, 7, 7))
+    assert s0.npacked != s1.npacked
+    return [s0, s1]
+
+
+def test_padded_pack_tables_dump_slot_and_validity():
+    spheres = _ragged_spheres()
+    idx, valid = padded_pack_tables(spheres)
+    npmax = max(s.npacked for s in spheres)
+    assert idx.shape == valid.shape == (2, npmax)
+    dump = 8 * 8 * 8
+    for k, s in enumerate(spheres):
+        np.testing.assert_array_equal(idx[k, :s.npacked], s.pack_indices())
+        assert (idx[k, s.npacked:] == dump).all()    # padded → dump slot
+        assert valid[k, :s.npacked].all()
+        assert not valid[k, s.npacked:].any()
+    with pytest.raises(ValueError, match="bounding box"):
+        padded_pack_tables([spheres[0], SphereDomain.from_diameter(6)])
+
+
+def test_stacked_pair_matches_per_sphere_reference():
+    """The stacked ragged batch reproduces each sphere's own plan pair —
+    padding changes the batch shape, never the numbers."""
+    g = ProcGrid.create([1])
+    spheres = _ragged_spheres()
+    nb, n = 2, 16
+    inv, fwd = make_stacked_planewave_pair(g, n, spheres, nb)
+    assert inv.nk == 2 and inv.npacked_max == max(s.npacked
+                                                  for s in spheres)
+    assert 0.0 < inv.padding_fraction < 0.5
+    rng = np.random.default_rng(5)
+    blocks = [jnp.asarray((rng.standard_normal((nb, s.npacked))
+                           + 1j * rng.standard_normal((nb, s.npacked))
+                           ).astype(np.complex64)) for s in spheres]
+    psi = inv(inv.unpack(inv.stack(blocks)))
+    assert psi.shape == (2 * nb, n, n, n)
+    back = inv.split(inv.pack(fwd(psi)))
+    for k, s in enumerate(spheres):
+        pinv, pfwd = make_planewave_pair(g, n, s, nb)
+        ref = pinv(pinv.unpack(blocks[k]))
+        np.testing.assert_array_equal(
+            np.asarray(psi[k * nb:(k + 1) * nb]), np.asarray(ref))
+        np.testing.assert_allclose(np.asarray(back[k]),
+                                   np.asarray(blocks[k]),
+                                   rtol=1e-3, atol=2e-5)
+
+
+def test_stacked_pair_shares_inner_plan_and_accounts_tables():
+    """plan= wraps an existing d³→n³ FftPlan (no second build); the ragged
+    tables are private bytes on top of the shared DFT-matrix tables."""
+    from repro.core import FftPlan
+    g = ProcGrid.create_abstract([1])
+    spheres = _ragged_spheres()
+    inv0, _ = make_stacked_planewave_pair(g, 16, spheres, 2)
+    searches = FftPlan.searches
+    inv, fwd = make_stacked_planewave_pair(g, 16, spheres, 2,
+                                           plan=inv0.plan)
+    assert inv.plan is inv0.plan
+    assert FftPlan.searches == searches          # wrapped, not re-planned
+    assert fwd.plan is inv0.plan.inverse()
+    tables = int(inv._pad_idx.nbytes) + int(inv._valid.nbytes)
+    assert inv.private_bytes() >= tables
+    assert inv.estimated_bytes() == inv.private_bytes() + sum(
+        inv.shared_table_bytes().values())
+    assert inv.shared_table_bytes() == inv0.plan.shared_table_bytes()
+    assert "Stacked" in inv.describe()
 
 
 def test_from_tensors_without_sphere_raises_value_error():

@@ -482,6 +482,77 @@ def test_estimated_bytes_sphere_tables_dominate(g1):
     assert small.estimated_bytes() >= tables
 
 
+def test_plan_cache_build_race_keeps_first_insert(g1):
+    """Two threads racing on one cold key: the first inserted plan wins,
+    the loser's duplicate is discarded (callers may already hold the
+    winner) and the loser counts as a hit, not a second miss."""
+    import threading
+    cache = PlanCache()
+    barrier = threading.Barrier(2)
+    built, results = [], {}
+
+    def builder():
+        barrier.wait(timeout=10)          # both threads past the lookup
+        obj = object()
+        built.append(obj)
+        return obj
+
+    def worker(name):
+        results[name] = cache.get_or_build("k", builder)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert len(built) == 2                # both really built…
+    assert results[0] is results[1]       # …but everyone got the winner
+    assert len(cache) == 1
+    assert cache.stats["misses"] == 1     # the loser is not a miss
+    assert cache.stats["hits"] == 1
+    # and the cached entry stays the winner afterwards
+    assert cache.get_or_build("k", lambda: object()) is results[0]
+
+
+def test_plan_cache_shared_dft_tables_counted_once(g1):
+    """Byte-accurate accounting: two plans sharing dft_matrix_device
+    tables (same (n_out, n_in, inverse) keys) must report less than 2×
+    one plan's bytes — the tables are one device allocation process-wide."""
+    cache = PlanCache()
+    b = Domain((0,), (1,))
+
+    def build(center):
+        sph = SphereDomain(radius=4.0, center=center, lower=(0, 0, 0),
+                           upper=(7, 7, 7))
+        return fftb.plan_for("b x{0} y z -> b X Y Z{0}", domains=(b, sph),
+                             grid=g1, sizes=(16, 16, 16), inverse=True,
+                             cache=cache)
+
+    p1 = build((3.5, 3.5, 3.5))
+    one = cache.resident_bytes
+    assert one == p1.estimated_bytes()
+    p2 = build((3.9, 3.9, 3.9))          # distinct sphere, same DFT tables
+    assert p2 is not p1
+    assert p1.shared_table_bytes() == p2.shared_table_bytes()
+    two = cache.resident_bytes
+    assert two < p1.estimated_bytes() + p2.estimated_bytes()
+    # exactly: the second plan adds only its private (pack/mask) bytes
+    assert two == one + p2.private_bytes()
+    # eviction releases the tables only when the last referent leaves
+    cache.clear()
+    assert cache.resident_bytes == 0
+
+
+def test_estimated_bytes_dedups_identical_stages(g1):
+    """A staged-padding plan runs the same rectangular DFT matrix in all
+    three stages — estimated_bytes charges that table once, not thrice."""
+    from repro.core import make_planewave_pair
+    inv, _ = make_planewave_pair(g1, 16, SphereDomain.from_diameter(8), 2)
+    tables = inv.shared_table_bytes()
+    assert tables == {(16, 8, True): 3 * 4 * 8 * 16}   # one key, 3 stages
+    assert inv.estimated_bytes() == inv.private_bytes() + 3 * 4 * 8 * 16
+
+
 def test_plan_cache_byte_weighted_eviction(g1):
     """Eviction triggers on resident bytes, not entry count: two sphere
     plans exceed the byte budget long before the 64-entry ceiling."""
