@@ -11,17 +11,38 @@ Exit 1 when any scenario's ``transforms_per_s`` regressed more than the
 tolerance, when a baseline scenario disappeared from the current run, or
 when a scenario stopped converging — a silently dropped scenario must not
 read as a pass.  Scenario configs (devices, quick flag, grid shape) are
-checked too: comparing numbers measured under different configurations is
-reported as an error, not a pass.  The other direction is *not* an error:
-a scenario present in the current run but absent from the baseline (a
-freshly added benchmark, e.g. ``scf-stacked`` before its first baseline
-refresh) is skipped with a warning and does not fail the gate — known
-scenarios still gate normally.  Refresh the baseline to start gating it.
+checked too, as are the *route* fields ``pipeline``/``stacked``/
+``band_update``: a scenario that silently fell back from the stacked
+band-update engine to the per-k path is a different configuration, not a
+perf data point — the gate catches exactly that fallback.  Comparing
+numbers measured under different configurations is an error, not a pass.
+The other direction is *not* an error: a scenario present in the current
+run but absent from the baseline (a freshly added benchmark, e.g.
+``scf-jit`` before its first baseline refresh) is skipped with a warning
+and does not fail the gate — known scenarios still gate normally.
+Refresh the baseline to start gating it.
 
 Refresh the baseline after an intentional perf change with::
 
     PYTHONPATH=src python -m benchmarks.compare BENCH_scf.json \\
         benchmarks/baseline.json --update-baseline
+
+**Drift check** (the scheduled baseline-refresh automation): with
+``--check-drift FRAC`` the gate runs as usual, and *additionally* reports
+scenarios whose throughput moved more than ``FRAC`` in **either**
+direction while still passing the gate.  Scenarios the baseline does not
+know yet count as a refresh signal too — otherwise a freshly added
+benchmark would stay ungated forever (the gate only warns about it, and
+pure drift only looks at scenarios both records share).  Exit codes make
+the three outcomes scriptable:
+
+    0 — gate passed, no drift beyond FRAC, no unknown scenarios
+    1 — gate failed (regression/config mismatch; drift not evaluated)
+    2 — gate passed but the baseline is stale (drift beyond FRAC and/or
+        scenarios missing from it): refresh the baseline
+
+The ``baseline-drift`` scheduled workflow uses exit 2 to open a PR that
+refreshes ``benchmarks/baseline.json`` via ``--update-baseline``.
 """
 from __future__ import annotations
 
@@ -29,14 +50,20 @@ import argparse
 import json
 import sys
 
+#: record keys that must match between baseline and current run —
+#: scenario config plus the route fields (a switched band-update route or
+#: pipeline flag measures a different configuration, not a perf delta)
+CONFIG_KEYS = ("grid_shape", "scenario", "pipeline", "stacked",
+               "band_update")
+
 
 def load_scenarios(path: str) -> dict:
     with open(path) as f:
         record = json.load(f)
     if not isinstance(record, dict) or "scenarios" not in record:
         raise SystemExit(
-            f"{path}: not a schema-2 BENCH_scf.json (missing 'scenarios'); "
-            "regenerate with benchmarks/run.py")
+            f"{path}: not a schema-2/3 BENCH_scf.json (missing "
+            "'scenarios'); regenerate with benchmarks/run.py")
     return record["scenarios"]
 
 
@@ -65,10 +92,7 @@ def compare_records(current: dict, baseline: dict,
                 f"{name}: scenario present in baseline but missing from "
                 "the current run")
             continue
-        # pipeline/stacked are route fields: a run that switched routes
-        # (e.g. scf-2d riding the stacked path) measures a different
-        # configuration even with identical scenario and grid shape
-        for key in ("grid_shape", "scenario", "pipeline", "stacked"):
+        for key in CONFIG_KEYS:
             if cur.get(key) != base.get(key):
                 failures.append(
                     f"{name}: {key} changed ({base.get(key)} -> "
@@ -94,6 +118,33 @@ def compare_records(current: dict, baseline: dict,
     return failures
 
 
+def drifted_scenarios(current: dict, baseline: dict,
+                      drift: float = 0.10) -> list[tuple]:
+    """Gate-passing scenarios whose throughput moved >``drift`` either way.
+
+    The baseline-refresh signal: only scenarios present in **both**
+    records with matching configurations and usable ``transforms_per_s``
+    qualify (everything else is the gate's business, not drift's).
+    Returns ``[(name, base_tps, cur_tps, fraction), ...]`` with fraction
+    signed (+0.25 = 25% faster than the baseline).
+    """
+    out: list[tuple] = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            continue
+        if any(cur.get(k) != base.get(k) for k in CONFIG_KEYS):
+            continue
+        base_tps = base.get("transforms_per_s")
+        cur_tps = cur.get("transforms_per_s")
+        if base_tps is None or cur_tps is None or float(base_tps) <= 0:
+            continue
+        frac = float(cur_tps) / float(base_tps) - 1.0
+        if abs(frac) > drift:
+            out.append((name, float(base_tps), float(cur_tps), frac))
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_scf.json")
@@ -101,6 +152,12 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed fractional transforms/s drop "
                          "(default 0.20)")
+    ap.add_argument("--check-drift", type=float, default=None,
+                    metavar="FRAC",
+                    help="after a passing gate, exit 2 when any "
+                         "scenario's transforms/s moved more than FRAC "
+                         "in either direction (the baseline-refresh "
+                         "signal; e.g. 0.10)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="overwrite the baseline with the current record "
                          "instead of gating")
@@ -143,6 +200,21 @@ def main(argv=None) -> int:
         return 1
     print(f"\nperf gate passed (tolerance -{args.tolerance:.0%}, "
           f"{len(baseline)} scenario(s))")
+    if args.check_drift is not None:
+        drifted = drifted_scenarios(current, baseline, args.check_drift)
+        unknown = unknown_scenarios(current, baseline)
+        if drifted or unknown:
+            print("\nBASELINE STALE (gate still green):")
+            for name, b, c, frac in drifted:
+                print(f"  - {name}: {b:.1f} -> {c:.1f} ({frac:+.1%}, "
+                      f"> {args.check_drift:.0%} drift)")
+            for name in unknown:
+                print(f"  - {name}: not in the baseline yet (ungated "
+                      "until refreshed)")
+            print("refresh with: python -m benchmarks.compare "
+                  f"{args.current} {args.baseline} --update-baseline")
+            return 2
+        print(f"no drift beyond {args.check_drift:.0%}")
     return 0
 
 

@@ -11,17 +11,22 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 ``derived`` column: modeled ms for fig9 rows, speedup/ratios elsewhere.
 The SCF scenarios (``scf`` on a 1D fft grid, ``scf-2d`` pipelined on a
-batch×fft 2D grid, ``scf-stacked`` with the ragged k-stacked H apply on
-the same 2D grid — each recording its grid shape and padding fraction)
-additionally write machine-readable ``BENCH_scf.json`` (transforms/s,
-iterations to convergence, plan-cache hit rate) so the perf trajectory can
-be tracked across commits; CI's bench-trajectory job uploads it and gates
-regressions against ``benchmarks/baseline.json`` via
-``benchmarks/compare.py``.  The JSON is written atomically (temp file +
-rename) so an interrupted run can't leave a truncated artifact.
+batch×fft 2D grid, ``scf-stacked`` with the batched stacked band-update
+engine on the same 2D grid, ``scf-jit`` adding the fused jit-compiled SCF
+step — each recording its grid shape, padding fraction, band-update route
+and per-iteration wall time) additionally write machine-readable
+schema-3 ``BENCH_scf.json`` (transforms/s, iterations to convergence,
+plan-cache hit rate) so the perf trajectory can be tracked across
+commits; CI's bench-trajectory job uploads it and gates regressions
+against ``benchmarks/baseline.json`` via ``benchmarks/compare.py``.  The
+``band_update`` field rides the record so the gate catches a silent
+fallback from the stacked engine to the per-k path; the stacked/jit
+scenarios additionally hard-fail here if the route they exist to measure
+did not engage.  The JSON is written atomically (temp file + rename) so
+an interrupted run can't leave a truncated artifact.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
-         [--scenarios scf,scf-2d,scf-stacked]
+         [--scenarios scf,scf-2d,scf-stacked,scf-jit]
 """
 from __future__ import annotations
 
@@ -35,7 +40,7 @@ import numpy as np
 
 #: selectable benchmark scenarios (--scenarios comma list, default all)
 SCENARIOS = ("table1", "plan_cache", "local_fft", "planewave", "fig9",
-             "scf", "scf-2d", "scf-stacked", "steps")
+             "scf", "scf-2d", "scf-stacked", "scf-jit", "steps")
 
 
 def _timeit(fn, *args, warmup=2, iters=5):
@@ -232,7 +237,7 @@ def bench_fig9(rows):
 
 
 def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
-              stack_k=None):
+              stack_k=None, jit_step=False):
     """repro.dft SCF scenario — the paper's end-to-end workload.
 
     Two k-points (two distinct sphere plans) + the full-cube Hartree pair,
@@ -240,11 +245,14 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
     batch×fft grid (``tag='scf-2d'``, grid_shape e.g. (2, 2) — bands shard
     the batch axis).  ``stack_k`` pins the H-sweep route: False keeps the
     pipelined per-k dispatch (so ``scf-2d`` stays comparable across
-    commits), True rides the ragged k-stacked batch (``scf-stacked`` —
-    one nk·nbands transform pair per sweep).  Returns the machine-readable
-    record merged into BENCH_scf.json; ``grid_shape`` in the record is
-    what the trajectory gate keys scenarios by, and ``padding_fraction``
-    reports the stacked batch's ragged-padding overhead.
+    commits), True rides the ragged k-stacked batch and the batched
+    band-update engine (``scf-stacked``); ``jit_step`` additionally fuses
+    each outer iteration into one jit-compiled step (``scf-jit``).
+    Returns the machine-readable schema-3 record merged into
+    BENCH_scf.json; ``grid_shape`` is what the trajectory gate keys
+    scenarios by, ``band_update`` lets it catch a silent fallback to the
+    per-k path, and ``seconds_per_iteration`` tracks per-sweep wall time
+    next to ``transforms_per_s``.
     """
     import jax
     from repro.core import ProcGrid, global_plan_cache
@@ -258,7 +266,7 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
                     max_iter=20 if quick else 50,
                     e_tol=1e-4 if quick else 1e-5,
                     r_tol=1e-3 if quick else 1e-4,
-                    stack_k=stack_k)
+                    stack_k=stack_k, jit_step=jit_step)
     global_plan_cache().clear()
     res = run_scf(cfg, grid=grid)
     c = res.cache_stats
@@ -266,7 +274,7 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
     hit_rate = c["hits"] / max(lookups, 1)
     label = tag.replace("-", "_")
     rows.append((f"{label}_outer_iteration",
-                 res.seconds / max(res.iterations, 1) * 1e6,
+                 res.seconds_per_iteration * 1e6,
                  res.iterations))
     rows.append((f"{label}_transforms_per_s", 0.0,
                  round(res.transforms_per_s, 1)))
@@ -276,10 +284,13 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
             "n": cfg.n, "nbands": cfg.nbands, "kpts": list(cfg.kpts),
             "max_iter": cfg.max_iter, "e_tol": cfg.e_tol,
             "devices": jax.device_count(), "quick": bool(quick),
+            "jit_step": bool(cfg.jit_step),
         },
         "grid_shape": list(grid_shape),
         "pipeline": bool(cfg.pipeline),
         "stacked": bool(res.stacked),
+        "band_update": res.band_update,
+        "jitted": bool(res.jitted),
         "padding_fraction": round(res.padding_fraction, 4),
         "converged": bool(res.converged),
         "scf_iterations": res.iterations,
@@ -288,6 +299,7 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
         "transforms_unit": "per-band 3D transforms (plans batch bands)",
         "transforms_per_s": round(res.transforms_per_s, 2),
         "seconds": round(res.seconds, 3),
+        "seconds_per_iteration": round(res.seconds_per_iteration, 4),
         "plan_cache": {"hits": c["hits"], "misses": c["misses"],
                        "hit_rate": round(hit_rate, 4)},
     }
@@ -385,6 +397,24 @@ def scf_stacked_grid_shape(ndevices: int) -> tuple[int, int] | None:
     return shape
 
 
+def require_stacked_route(record: dict, tag: str) -> dict:
+    """Hard-fail when a stacked-route scenario fell back to per-k.
+
+    ``scf-stacked``/``scf-jit`` exist to measure the batched band-update
+    engine; a record that quietly took the per-k path would be compared
+    against stacked baselines and read as a perf cliff (or mask one).
+    The gate also rejects such records via the ``band_update`` config
+    key, but the run itself should refuse to emit them.
+    """
+    if record.get("band_update") != "stacked":
+        raise SystemExit(
+            f"{tag}: band-update route was {record.get('band_update')!r}, "
+            "expected 'stacked' — the scenario's grid no longer satisfies "
+            "basis.stacks_k; fix the grid choice rather than benchmarking "
+            "the fallback under a stacked label")
+    return record
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -441,9 +471,24 @@ def main(argv=None) -> None:
                   "batch (XLA_FLAGS=--xla_force_host_platform_device_"
                   "count=4)")
         else:
-            scf_records["scf-stacked"] = bench_scf(
-                rows, args.quick, grid_shape=shape, tag="scf-stacked",
-                stack_k=True)
+            scf_records["scf-stacked"] = require_stacked_route(
+                bench_scf(rows, args.quick, grid_shape=shape,
+                          tag="scf-stacked", stack_k=True),
+                "scf-stacked")
+    if "scf-jit" in wanted:
+        import jax
+        shape = scf_stacked_grid_shape(jax.device_count())
+        if shape is None:
+            print(f"# scf-jit skipped: needs the scf-stacked grid (a "
+                  f"batch×fft split whose batch factor carries the "
+                  f"nk·nbands = {SCF_NK}·{SCF_NBANDS} stacked batch); "
+                  f"{jax.device_count()} device(s) have none "
+                  "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        else:
+            scf_records["scf-jit"] = require_stacked_route(
+                bench_scf(rows, args.quick, grid_shape=shape,
+                          tag="scf-jit", stack_k=True, jit_step=True),
+                "scf-jit")
     if "steps" in wanted:
         # --quick drops steps from the default "all" sweep, but an
         # explicitly requested scenario always runs
@@ -458,7 +503,7 @@ def main(argv=None) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if scf_records:
-        atomic_json_dump({"schema": 2, "scenarios": scf_records},
+        atomic_json_dump({"schema": 3, "scenarios": scf_records},
                          args.json_out)
         print(f"# wrote {args.json_out} "
               f"(scenarios: {', '.join(scf_records)})")

@@ -66,9 +66,15 @@ def main(argv=None):
                          "k-point pipeline")
     ap.add_argument("--stack-k", default="auto",
                     choices=["auto", "on", "off"],
-                    help="ragged k-stacked H applies: 'auto' engages when "
-                         "the grid shards the nk·nbands batch evenly "
+                    help="ragged k-stacked H applies + the batched "
+                         "band-update engine: 'auto' engages when the "
+                         "grid shards the nk·nbands batch evenly "
                          "(basis.stacks_k), 'on'/'off' force the route")
+    ap.add_argument("--jit-step", action="store_true",
+                    help="fuse mixing + band update + density into one "
+                         "jit-compiled step per outer iteration "
+                         "(requires the stacked route; combine with "
+                         "--stack-k on to force it on small grids)")
     args = ap.parse_args(argv)
 
     cfg = SCFConfig(
@@ -78,6 +84,7 @@ def main(argv=None):
         depth=args.depth, xc=not args.no_xc, seed=args.seed,
         pipeline=not args.no_pipeline,
         stack_k={"auto": None, "on": True, "off": False}[args.stack_k],
+        jit_step=args.jit_step,
         policy=ExecPolicy.from_mode(args.policy))
     grid = parse_grid(args.grid, cfg)
 
@@ -96,10 +103,12 @@ def main(argv=None):
     for ik, eps in enumerate(res.eigenvalues):
         print(f"  k[{ik}] eigenvalues: "
               + "  ".join(f"{e:+.4f}" for e in eps))
-    route = (f"k-stacked H applies (padding "
+    route = (f"stacked band updates (padding "
              f"{res.padding_fraction:.1%})" if res.stacked
              else "pipelined per-k H applies" if cfg.pipeline
              else "serial per-k H applies")
+    if res.jitted:
+        route += ", fused jit step"
     print(f"{res.transforms} per-band 3D transforms in {res.seconds:.2f}s "
           f"({res.transforms_per_s:.1f} transforms/s, batched over "
           f"{cfg.nbands} bands per plan call, {route})")

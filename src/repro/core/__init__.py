@@ -11,7 +11,9 @@ from .local_fft import dft_matrix, local_dft
 from .plan import FftPlan, Plan
 from .planewave import (PlaneWaveFFT, StackedPlaneWaveFFT, cube_spec,
                         make_planewave_pair, make_stacked_planewave_pair,
-                        padded_pack_tables, planewave_spec)
+                        padded_kinetic_table, padded_pack_tables,
+                        planewave_spec, sphere_gvectors,
+                        sphere_kinetic_row)
 from .policy import ExecPolicy
 from .spectral import fft_conv, fourier_mixer
 
@@ -20,8 +22,9 @@ __all__ = [
     "parse_dims", "parse_transform_spec", "dims_string", "Transform",
     "fftb", "ProcGrid", "dft_matrix", "local_dft", "Plan", "FftPlan",
     "PlaneWaveFFT", "StackedPlaneWaveFFT", "make_planewave_pair",
-    "make_stacked_planewave_pair", "padded_pack_tables", "planewave_spec",
-    "cube_spec",
+    "make_stacked_planewave_pair", "padded_kinetic_table",
+    "padded_pack_tables", "planewave_spec", "cube_spec",
+    "sphere_gvectors", "sphere_kinetic_row",
     "ExecPolicy", "PlanCache",
     "global_plan_cache", "fft_conv", "fourier_mixer",
 ]

@@ -61,6 +61,20 @@ def abstract_mesh(shape: Sequence[int], names: Sequence[str]):
         return AbstractMesh(tuple(zip(names, shape)))
 
 
+def is_tracer(x) -> bool:
+    """True when ``x`` is an abstract tracer (inside jit/vmap tracing).
+
+    Placement pinning must switch from ``device_put`` (eager arrays) to
+    ``with_sharding_constraint`` (tracers); ``jax.core.Tracer`` is the
+    stable spelling on every supported version, with a duck-typed
+    fallback should a future release drop it.
+    """
+    try:
+        return isinstance(x, jax.core.Tracer)
+    except AttributeError:  # pragma: no cover - future jax without jax.core
+        return type(x).__name__.endswith("Tracer")
+
+
 def shard_map(body, mesh, in_specs, out_specs):
     """``shard_map`` with the replication check off, any JAX version."""
     if hasattr(jax, "shard_map"):

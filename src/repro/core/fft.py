@@ -18,13 +18,15 @@ domains selects the plane-wave staged-padding path automatically.
 code never re-runs the schedule search for a transform it has already used.
 
 The paper's positional C++-style signature
-``fftb(sizes, to, "X Y Z", ti, "x y z", g)`` still works as a thin
-deprecated shim.
+``fftb(sizes, to, "X Y Z", ti, "x y z", g)`` was deprecated in PR 1 and has
+been **removed** after the two-PR grace window; calling ``fftb`` with
+anything but an arrow-spec string raises a ``TypeError`` carrying the
+migration recipe (fold the two dims-strings into one arrow spec, pass
+domains instead of hand-built ``DistTensor``s).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 from .cache import PlanCache, domains_key, global_plan_cache, grid_key
 from .domain import Domain, SphereDomain
@@ -205,55 +207,31 @@ def apply(spec: str, x, *, domains, grid, out_domains=None, sizes=None,
 
 
 # ------------------------------------------------------------- entry point
-def fftb(spec_or_sizes, *args, **kwargs):
+def fftb(spec, *args, **kwargs):
     """Create a distributed (batched) multi-dimensional Fourier transform.
 
-    New form — arrow spec plus domains/grid::
+    One form — arrow spec plus domains/grid::
 
         fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
-
-    Deprecated positional form (the paper's C++ signature)::
-
-        fftb(sizes, tout, "X Y Z", tin, "x y z", g)
 
     Returns a Plan (FftPlan or PlaneWaveFFT) exposing ``__call__``,
     ``inverse()``, ``adjoint()``, ``tune()``, ``describe()``,
     ``flop_count()`` and ``comm_stats()``.
+
+    The paper's positional C++-style signature
+    ``fftb(sizes, tout, "X Y Z", tin, "x y z", g)`` was deprecated in
+    PR 1 and removed after the grace window — see the TypeError below
+    (and README "Migrating from the positional form") for the recipe.
     """
-    if isinstance(spec_or_sizes, str):
-        return Transform.parse(spec_or_sizes).build(*args, **kwargs)
-    return _fftb_positional(spec_or_sizes, *args, **kwargs)
-
-
-def _fftb_positional(sizes, tout: DistTensor, out_dims: str,
-                     tin: DistTensor, in_dims: str, grid=None, *,
-                     inverse: bool = False, backend: str = "matmul",
-                     policy: ExecPolicy | None = None):
-    warnings.warn(
-        "fftb(sizes, tout, out_dims, tin, in_dims, grid) is deprecated; "
-        "use fftb('in_dims -> out_dims', domains=..., grid=...) or "
-        "fftb.apply(...)", DeprecationWarning, stacklevel=3)
-    grid = grid or tin.grid
-    in_names = tuple(in_dims.split())
-    out_names = tuple(out_dims.split())
-    if len(in_names) != len(out_names):
-        raise ValueError("in/out transform dims must pair up")
-    sizes = tuple(sizes)
-    if len(sizes) != len(in_names):
-        raise ValueError("one size per transformed dim")
-
-    sphere = any(isinstance(d, SphereDomain) for d in tin.domains)
-    if sphere:
-        return PlaneWaveFFT.from_tensors(sizes, tout, out_names, tin,
-                                         in_names, grid, inverse=inverse,
-                                         backend=backend, policy=policy)
-    for nm, n in zip(out_names, sizes):
-        if tout.dim_size(nm) != n:
-            raise ValueError(
-                f"output dim {nm} extent {tout.dim_size(nm)} != size {n}")
-    pairs = list(zip(in_names, out_names))
-    return FftPlan(tin, tout, pairs, inverse=inverse, backend=backend,
-                   policy=policy)
+    if not isinstance(spec, str):
+        raise TypeError(
+            "the positional fftb(sizes, tout, out_dims, tin, in_dims, "
+            "grid) signature has been removed; fold the dims-strings into "
+            "one arrow spec and pass domains instead of DistTensors: "
+            "fftb('x{0} y z -> X Y Z{0}', domains=dom, grid=g, "
+            "sizes=...) — see README 'Migrating from the positional "
+            "form'")
+    return Transform.parse(spec).build(*args, **kwargs)
 
 
 fftb.apply = apply

@@ -89,12 +89,19 @@ class ProcGrid:
         replicated sharding makes the placement unambiguous before such
         mixing; on a 1-process grid this is a no-op and results are
         bitwise unchanged.
+
+        Under a jit trace (the fused SCF step) the same pinning becomes a
+        sharding *constraint* — ``device_put`` cannot move a tracer, but
+        the compiler honors the replicated placement at that point.
         """
         if self.nprocs == 1:
             return x
         import jax
         sharding = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec())
+        from . import compat
+        if compat.is_tracer(x):
+            return jax.lax.with_sharding_constraint(x, sharding)
         return jax.device_put(x, sharding)
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

@@ -102,24 +102,20 @@ class Plan:
     policy: ExecPolicy
 
     # ----------------------------------------------------------- execution
-    def __call__(self, x, *, mode: str | None = None,
-                 policy: ExecPolicy | None = None):
-        pol = self.resolve_policy(mode=mode, policy=policy)
+    def __call__(self, x, *, policy: ExecPolicy | None = None):
+        pol = self.resolve_policy(policy=policy)
         if pol.check_shapes and tuple(x.shape) != self.tin.shape:
             raise ValueError(f"input shape {x.shape} != {self.tin.shape}")
         return self._execute(x, pol)
 
-    def resolve_policy(self, *, mode: str | None = None,
+    def resolve_policy(self, *,
                        policy: ExecPolicy | None = None) -> ExecPolicy:
-        if policy is not None and mode is not None:
-            raise ValueError("pass either mode= (legacy) or policy=, "
-                             "not both")
-        if policy is not None:
-            return policy
-        if mode is not None:
-            return ExecPolicy.from_mode(
-                mode, check_shapes=self.policy.check_shapes)
-        return self.policy
+        """The call-time policy: an explicit ``policy=`` wins, otherwise
+        the plan's default.  (The legacy call-site ``mode=`` string shim
+        was removed with the positional ``fftb`` signature; legacy
+        strings still convert via ``ExecPolicy.from_mode`` at config
+        boundaries, e.g. CLI flags.)"""
+        return policy if policy is not None else self.policy
 
     def _execute(self, x, pol: ExecPolicy):
         raise NotImplementedError
@@ -284,6 +280,13 @@ class FftPlan(Plan):
     #: process-wide count of schedule searches — lets tests (and the plan
     #: cache) assert that derived/cached plans never re-plan.
     searches = 0
+
+    #: process-wide count of distributed-transform dispatches (one per
+    #: executor invocation; under jit tracing that is once per traced
+    #: transform, so a jitted SCF step counts its transforms at trace
+    #: time and then never again) — instrumentation for "exactly two
+    #: distributed transforms per stacked sweep" assertions.
+    executions = 0
 
     def __init__(self, tin: DistTensor, tout: DistTensor,
                  fft_dims: list[tuple[str, str]], *, inverse: bool = False,
@@ -530,4 +533,5 @@ class FftPlan(Plan):
         return fn
 
     def _execute(self, x, pol: ExecPolicy):
+        FftPlan.executions += 1
         return self._fn_for(pol)(x)

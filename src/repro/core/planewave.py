@@ -63,25 +63,6 @@ class PlaneWaveFFT(Plan):
         self._pack_idx = jnp.asarray(sphere.pack_indices())
         self._mask = jnp.asarray(sphere.mask())
 
-    # ------------------------------------------------------------- factory
-    @staticmethod
-    def from_tensors(sizes, tout, out_names, tin, in_names, grid, *,
-                     inverse: bool, backend: str = "matmul",
-                     policy: ExecPolicy | None = None):
-        side = tin if inverse else tout
-        sphere = next((d for d in side.domains
-                       if isinstance(d, SphereDomain)), None)
-        if sphere is None:
-            which = "input" if inverse else "output"
-            kinds = [type(d).__name__ for d in side.domains]
-            raise ValueError(
-                f"PlaneWaveFFT needs a SphereDomain among the {which} "
-                f"domains (the packed side of the transform); got "
-                f"{kinds} for dims {side.dims}")
-        pairs = list(zip(in_names, out_names))
-        return PlaneWaveFFT(sphere, sizes, tin, tout, inverse=inverse,
-                            backend=backend, pairs=pairs, policy=policy)
-
     # ------------------------------------------------------------- execute
     # __call__/tune come from Plan; execution delegates to the inner plan
     def _execute(self, x, pol: ExecPolicy):
@@ -243,6 +224,60 @@ def padded_pack_tables(spheres) -> tuple[np.ndarray, np.ndarray]:
     return idx, valid
 
 
+def sphere_gvectors(sphere) -> np.ndarray:
+    """(npacked, 3) G+k offsets from the sphere center, in units 2π/L.
+
+    CSR (pack) order — aligned with the packed coefficient vector.  The
+    single flat-index → (x, y, z) → offset decode shared by the per-k
+    ladders (``PlaneWaveBasis.gvectors``) and the padded dense tables
+    below, so the two can never drift apart.
+    """
+    ex, ey, ez = sphere.extents
+    flat = sphere.pack_indices()
+    idx = np.stack([flat // (ey * ez), (flat // ez) % ey,
+                    flat % ez], axis=1).astype(np.float64)
+    return idx - np.asarray(sphere.center)
+
+
+def sphere_kinetic_row(sphere, box_length: float) -> np.ndarray:
+    """½|G+k|² over the packed coefficients (float32, CSR pack order).
+
+    The one f64→f32 pipeline behind every kinetic ladder in the repo —
+    per-k (``PlaneWaveBasis.kinetic``) and padded-dense alike — so
+    "bitwise-equal on valid lanes" holds by construction, not by two
+    copies staying in sync.
+    """
+    g = sphere_gvectors(sphere)
+    g2 = (g ** 2).sum(1) * (2 * np.pi / float(box_length)) ** 2
+    return 0.5 * g2.astype(np.float32)
+
+
+def padded_kinetic_table(spheres, box_length: float
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Dense per-k kinetic diagonal over the padded lanes, plus the mask.
+
+    Returns ``(kinetic, valid)``: ``kinetic`` is ``(nk, npacked_max)``
+    float32 holding ½|G+k|² per packed coefficient (units set by the cell
+    side ``box_length`` — a reciprocal-lattice step is 2π/L), exactly
+    **zero** on padded lanes; ``valid`` is the matching boolean lane mask
+    (the same one :func:`padded_pack_tables` bakes into its index table).
+
+    This is the dense-table counterpart of the ragged per-k kinetic
+    ladders: because padded lanes carry exact zeros, the table can ride
+    batched einsums — Gram matrices, kinetic energies, preconditioners —
+    over the full ``(nk, nbands, npacked_max)`` stack without any runtime
+    masking, and padded lanes contribute exact zeros to every reduction.
+    Values on valid lanes are computed with the same float64→float32
+    pipeline as the per-k ladders, so the two agree bitwise.
+    """
+    spheres = list(spheres)
+    _, valid = padded_pack_tables(spheres)      # also checks bounding boxes
+    kin = np.zeros(valid.shape, np.float32)
+    for k, s in enumerate(spheres):
+        kin[k, :s.npacked] = sphere_kinetic_row(s, box_length)
+    return kin, valid
+
+
 class StackedPlaneWaveFFT(Plan):
     """One sphere↔cube transform over a ragged batch of k-point spheres.
 
@@ -302,6 +337,15 @@ class StackedPlaneWaveFFT(Plan):
         """Fraction of the (nk, npacked_max) lanes that are padding."""
         used = sum(s.npacked for s in self.spheres)
         return 1.0 - used / float(self.nk * self.npacked_max)
+
+    def valid_lanes(self) -> np.ndarray:
+        """(nk, npacked_max) boolean lane-validity mask (host-side copy).
+
+        The same mask :func:`padded_pack_tables` bakes into the index
+        tables — True where a lane holds a real packed coefficient,
+        False on padding.
+        """
+        return self._valid.copy()
 
     # ------------------------------------------------------------- execute
     def _execute(self, x, pol: ExecPolicy):

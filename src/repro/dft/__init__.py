@@ -20,21 +20,24 @@ Quickstart::
     print(res.energy, res.converged, res.cache_stats)
 """
 
-from .basis import CUBE_SPEC, PW_SPEC, PlaneWaveBasis
-from .density import density_from_orbitals
-from .hamiltonian import (apply_hamiltonian, apply_hamiltonian_pipelined,
+from .basis import CUBE_SPEC, PW_SPEC, PlaneWaveBasis, StackedBandTables
+from .density import density_from_orbitals, density_from_stacked
+from .hamiltonian import (apply_hamiltonian, apply_hamiltonian_padded,
+                          apply_hamiltonian_pipelined,
                           apply_hamiltonian_stacked, update_bands,
-                          update_bands_all_k)
+                          update_bands_all_k, update_bands_stacked)
 from .hartree import HartreeSolver, coulomb_kernel
 from .potentials import gaussian_wells, lda_exchange
 from .scf import (AndersonMixer, LinearMixer, SCFConfig, SCFResult, run_scf,
-                  total_energy)
+                  total_energy, total_energy_stacked)
 
 __all__ = [
-    "PlaneWaveBasis", "PW_SPEC", "CUBE_SPEC", "density_from_orbitals",
-    "apply_hamiltonian", "apply_hamiltonian_pipelined",
-    "apply_hamiltonian_stacked", "update_bands",
-    "update_bands_all_k", "HartreeSolver", "coulomb_kernel",
-    "gaussian_wells", "lda_exchange", "SCFConfig", "SCFResult", "run_scf",
-    "total_energy", "LinearMixer", "AndersonMixer",
+    "PlaneWaveBasis", "StackedBandTables", "PW_SPEC", "CUBE_SPEC",
+    "density_from_orbitals", "density_from_stacked",
+    "apply_hamiltonian", "apply_hamiltonian_padded",
+    "apply_hamiltonian_pipelined", "apply_hamiltonian_stacked",
+    "update_bands", "update_bands_all_k", "update_bands_stacked",
+    "HartreeSolver", "coulomb_kernel", "gaussian_wells", "lda_exchange",
+    "SCFConfig", "SCFResult", "run_scf", "total_energy",
+    "total_energy_stacked", "LinearMixer", "AndersonMixer",
 ]

@@ -27,6 +27,7 @@ construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import numpy as np
@@ -36,7 +37,8 @@ import jax.numpy as jnp
 
 from repro.core import (Domain, ProcGrid, SphereDomain, cube_spec, fftb,
                         global_plan_cache, make_stacked_planewave_pair,
-                        planewave_spec)
+                        padded_kinetic_table, planewave_spec,
+                        sphere_gvectors, sphere_kinetic_row)
 from repro.core.cache import domains_key, grid_key
 from repro.core.policy import ExecPolicy
 
@@ -45,6 +47,43 @@ from repro.core.policy import ExecPolicy
 PW_SPEC = planewave_spec()
 #: full density/potential cube, real space (z-sharded) → G space (Z-sharded)
 CUBE_SPEC = cube_spec()
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedBandTables:
+    """Dense per-k tables for the batched band-update engine.
+
+    All three are ``(nk, npacked_max)`` float32 arrays, pinned replicated
+    on the basis's mesh, with **exact zeros** on padded lanes — so they
+    can ride batched einsums over the full ``(nk, nbands, npacked_max)``
+    coefficient stack, and padded lanes contribute exact zeros to every
+    Gram matrix, energy and preconditioned residual without any runtime
+    masking:
+
+      * ``kinetic``  — ½|G+k|² diagonal (bitwise-equal to the per-k
+        :meth:`PlaneWaveBasis.kinetic` ladders on valid lanes),
+      * ``mask``     — lane validity as {0.0, 1.0},
+      * ``precond``  — the masked Teter-style damping mask/(1 + ½|G+k|²).
+
+    Cached in the process-global ``PlanCache`` next to the stacked plan
+    pair (same key ingredients), so every SCF iteration after the first
+    is a cache hit; the cache bills the three tables as private bytes.
+    """
+
+    kinetic: jnp.ndarray
+    mask: jnp.ndarray
+    precond: jnp.ndarray
+
+    # ------------------------------------------- PlanCache accounting
+    def private_bytes(self) -> int:
+        return sum(int(a.nbytes)
+                   for a in (self.kinetic, self.mask, self.precond))
+
+    def shared_table_bytes(self) -> dict:
+        return {}
+
+    def estimated_bytes(self) -> int:
+        return self.private_bytes()
 
 
 class PlaneWaveBasis:
@@ -155,6 +194,17 @@ class PlaneWaveBasis:
         return self.spheres[ik].npacked
 
     @property
+    def npacked_max(self) -> int:
+        """max_k npacked(k) — the padded lane count of the stacked batch.
+
+        Both band-update engines run their Gram/Rayleigh-Ritz contractions
+        over exactly this many lanes (padded with exact zeros), so the
+        per-k and stacked paths share one rounding behaviour; see
+        ``dft.hamiltonian``.
+        """
+        return max(s.npacked for s in self.spheres)
+
+    @property
     def stacks_k(self) -> bool:
         """True when k-points stack into the transforms' batch dimension.
 
@@ -174,22 +224,22 @@ class PlaneWaveBasis:
     def gvectors(self, ik: int) -> np.ndarray:
         """(npacked, 3) G+k offsets from the sphere center, in units 2π/L.
 
-        CSR (pack) order — aligned with the packed coefficient vector."""
+        CSR (pack) order — aligned with the packed coefficient vector.
+        Delegates to ``core.planewave.sphere_gvectors``, the same decode
+        the padded dense tables use."""
         if self._gvec[ik] is None:
-            sph = self.spheres[ik]
-            ex, ey, ez = sph.extents
-            flat = sph.pack_indices()
-            idx = np.stack([flat // (ey * ez), (flat // ez) % ey,
-                            flat % ez], axis=1).astype(np.float64)
-            self._gvec[ik] = idx - np.asarray(sph.center)
+            self._gvec[ik] = sphere_gvectors(self.spheres[ik])
         return self._gvec[ik]
 
     def kinetic(self, ik: int):
-        """½|G+k|² diagonal over packed coefficients (f32, on device)."""
+        """½|G+k|² diagonal over packed coefficients (f32, on device).
+
+        The same ``sphere_kinetic_row`` pipeline that fills the padded
+        table in :meth:`stacked_band_tables`, so the two agree bitwise
+        by construction."""
         if self._kin[ik] is None:
-            g = self.gvectors(ik)
-            g2 = (g ** 2).sum(1) * (2 * np.pi / self.L) ** 2
-            self._kin[ik] = jnp.asarray(0.5 * g2.astype(np.float32))
+            self._kin[ik] = jnp.asarray(
+                sphere_kinetic_row(self.spheres[ik], self.L))
         return self._kin[ik]
 
     # ----------------------------------------------------------------- plans
@@ -248,6 +298,33 @@ class PlaneWaveBasis:
                 fft_axes=self.fft_axes, policy=self.policy,
                 plan=self.stacked_inverse_plan())[0])
         return inv, inv.inverse()   # mirror is memoized on the plan
+
+    def stacked_band_tables(self) -> StackedBandTables:
+        """Dense kinetic/mask/precond tables for the stacked band update.
+
+        Served from the process-global PlanCache alongside the stacked
+        plan pair: the first request per sphere set builds the padded
+        tables (host-side numpy + one replicated device_put), every later
+        request — the next band sweep, the next SCF iteration — is a
+        cache hit.  Values on valid lanes match the per-k ladders bitwise
+        (same float64→float32 pipeline for ``kinetic``, the same float32
+        ``1/(1 + kin)`` arithmetic for ``precond``), padded lanes are
+        exact zeros in all three tables.
+        """
+        cache = global_plan_cache()
+        key = ("stacked-band-tables", domains_key(tuple(self.spheres)),
+               (self.nk, self.nbands), grid_key(self.grid), self.L)
+        return cache.get_or_build(key, self._build_band_tables)
+
+    def _build_band_tables(self) -> StackedBandTables:
+        kin_np, valid = padded_kinetic_table(self.spheres, self.L)
+        kin = self.grid.replicate(jnp.asarray(kin_np))
+        mask = self.grid.replicate(
+            jnp.asarray(valid.astype(np.float32)))
+        # same f32 ops as the per-k 1/(1 + kinetic(ik)) preconditioner, so
+        # valid lanes agree bitwise; mask zeroes the padded lanes exactly
+        precond = self.grid.replicate(mask / (1.0 + kin))
+        return StackedBandTables(kinetic=kin, mask=mask, precond=precond)
 
     def cube_plans(self):
         """(forward, inverse) full-cube pair for density/potential fields."""

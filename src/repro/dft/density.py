@@ -25,17 +25,33 @@ import numpy as np
 import jax.numpy as jnp
 
 
-def _density_stacked(basis, coeffs, occ) -> jnp.ndarray:
-    """One nk·nbands-batched transform; k and bands shard the batch axes.
+def density_from_stacked(basis, c_pad, occ) -> jnp.ndarray:
+    """ρ(r) from the padded (nk, nbands, npacked_max) coefficient stack.
 
+    One nk·nbands-batched transform; k and bands shard the batch axes.
     Rides the same ragged ``StackedPlaneWaveFFT`` pair as the stacked
     Hamiltonian apply (padded per-k pack tables, shared d³→n³ plan), so
     the stacked SCF path never needs the per-k sphere plans at all.
+    Padded lanes never reach the cube (the unpack scatter routes them to
+    the dump slot), so they contribute nothing to ρ.  Traceable — the
+    jitted SCF step runs it under ``jax.jit``; ``occ`` must be a
+    trace-time constant (numpy).
     """
     inv, _ = basis.stacked_hamiltonian_plans()
-    psi = inv(inv.unpack(inv.stack(coeffs)))
-    w = (basis.weights[:, None] * occ).reshape(-1).astype(np.float32)
-    return jnp.tensordot(jnp.asarray(w), jnp.abs(psi) ** 2, axes=(0, 0))
+    nk, nb, npm = c_pad.shape
+    psi = inv(inv.unpack(c_pad.reshape(nk * nb, npm)))
+    w = (basis.weights[:, None] * np.asarray(occ, np.float64)
+         ).reshape(-1).astype(np.float32)
+    rho = jnp.tensordot(jnp.asarray(w), jnp.abs(psi) ** 2, axes=(0, 0))
+    return rho * jnp.float32(basis.n ** 3 / basis.dv)
+
+
+def _density_stacked(basis, coeffs, occ) -> jnp.ndarray:
+    """Per-k blocks → one stacked-batch density (see density_from_stacked)."""
+    inv, _ = basis.stacked_hamiltonian_plans()
+    c_pad = inv.stack(coeffs).reshape(basis.nk, basis.nbands,
+                                      inv.npacked_max)
+    return density_from_stacked(basis, c_pad, occ)
 
 
 def density_from_orbitals(basis, coeffs, occ) -> jnp.ndarray:
@@ -50,14 +66,13 @@ def density_from_orbitals(basis, coeffs, occ) -> jnp.ndarray:
             f"occ shape {occ.shape} != (nk, nbands) = "
             f"({basis.nk}, {basis.nbands})")
     if getattr(basis, "stacks_k", False):
-        rho = _density_stacked(basis, coeffs, occ)
-    else:
-        rho = jnp.zeros((basis.n,) * 3, jnp.float32)
-        for ik, c in enumerate(coeffs):
-            inv, _ = basis.plans_for_k(ik)
-            psi = inv(inv.unpack(c))              # (nb, n, n, n) sharded
-            f = jnp.asarray((basis.weights[ik] * occ[ik]).astype(np.float32))
-            rho = rho + jnp.tensordot(f, jnp.abs(psi) ** 2, axes=(0, 0))
+        return _density_stacked(basis, coeffs, occ)   # prefactor included
+    rho = jnp.zeros((basis.n,) * 3, jnp.float32)
+    for ik, c in enumerate(coeffs):
+        inv, _ = basis.plans_for_k(ik)
+        psi = inv(inv.unpack(c))              # (nb, n, n, n) sharded
+        f = jnp.asarray((basis.weights[ik] * occ[ik]).astype(np.float32))
+        rho = rho + jnp.tensordot(f, jnp.abs(psi) ** 2, axes=(0, 0))
     return rho * jnp.float32(basis.n ** 3 / basis.dv)
 
 

@@ -20,10 +20,33 @@ solve in the 2·nb-dimensional span of the current bands and their
 preconditioned residuals, which picks the optimal step length per band
 automatically.  The preconditioner is the Teter-style kinetic damping
 1/(1 + ½|G+k|²).
+
+Two band-update engines share that math:
+
+  * the **per-k** path (``update_bands`` / the pipelined loop inside
+    ``update_bands_all_k``) runs the Gram builds, Rayleigh-Ritz solves
+    and orthonormalizations k-point by k-point in eager Python — the
+    fallback and equivalence oracle;
+  * the **stacked** engine (:func:`update_bands_stacked`) runs them as
+    batched einsums / batched ``eigh``/``qr`` over one padded
+    ``(nk, nbands, npacked_max)`` coefficient array, with the kinetic
+    and preconditioner served as dense per-k tables
+    (``basis.stacked_band_tables()``).  Padded lanes hold exact zeros in
+    coefficients, H·c blocks and tables alike, so they contribute exact
+    zeros to every reduction and the two engines agree bitwise on CPU
+    (asserted to 1e-10 in tests).  One sweep is **two** distributed
+    transforms and **zero** per-k Python linalg calls, whatever nk is —
+    ``PERK_LINALG_CALLS`` and ``FftPlan.executions`` instrument exactly
+    that.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+#: process-wide count of per-k eager linalg calls (descent-direction
+#: builds and Rayleigh-Ritz solves dispatched for a single k-point) —
+#: lets tests assert the stacked engine performs zero of them.
+PERK_LINALG_CALLS = 0
 
 
 def _replicated(basis, x):
@@ -91,19 +114,41 @@ def apply_hamiltonian_pipelined(basis, blocks, v_eff):
     return out
 
 
+def apply_hamiltonian_padded(basis, c_pad, v_eff, kin_pad=None):
+    """H·c on the padded ``(nk, nbands, npacked_max)`` coefficient stack.
+
+    The array-native core of the stacked route: one batched inverse
+    transform, one cube-space ``v_eff`` multiply, one batched forward —
+    two distributed transforms for every k-point and band at once — plus
+    the dense padded kinetic diagonal (``basis.stacked_band_tables()``)
+    applied as a broadcast multiply.  Padded lanes stay exact zeros: the
+    pack gather reads them from the zero slot and the kinetic table is
+    zero there, so H·c is as inert on padding as c itself.  Traceable
+    (the jitted SCF step runs it under ``jax.jit``).
+    """
+    if kin_pad is None:
+        kin_pad = basis.stacked_band_tables().kinetic
+    inv, fwd = basis.stacked_hamiltonian_plans()
+    nk, nb, npm = c_pad.shape
+    psi = inv(inv.unpack(c_pad.reshape(nk * nb, npm)))
+    vpsi = fwd(psi * v_eff)                   # apply V, truncate back
+    vc = inv.pack(vpsi).reshape(nk, nb, npm)
+    return kin_pad[:, None, :] * c_pad + vc
+
+
 def apply_hamiltonian_stacked(basis, blocks, v_eff):
     """H·c for *all* k-points in one ragged stacked batch.
 
     The pipelined path still dispatches one sphere→cube→sphere round trip
     per k-point; here every k-point's bands ride a single
     ``(nk·nbands, npacked_max)`` padded batch through the basis's
-    ``StackedPlaneWaveFFT`` pair: **one** batched inverse transform, one
-    cube-space ``v_eff`` multiply, one batched forward — two distributed
-    transforms per H sweep regardless of nk and nbands.  Raggedness
-    (distinct ``npacked_k``) is absorbed by the padded pack tables, whose
-    dump/zero slots keep padded lanes inert; the kinetic diagonal is
-    applied per k on the unpadded blocks.  Per-orbital math is identical
-    to :func:`apply_hamiltonian` — same rectangular DFT stages, same
+    ``StackedPlaneWaveFFT`` pair (:func:`apply_hamiltonian_padded`):
+    two distributed transforms per H sweep regardless of nk and nbands.
+    Raggedness (distinct ``npacked_k``) is absorbed by the padded pack
+    tables, whose dump/zero slots keep padded lanes inert; the kinetic
+    diagonal rides the dense padded table, which matches the per-k
+    ladders bitwise on valid lanes.  Per-orbital math is identical to
+    :func:`apply_hamiltonian` — same rectangular DFT stages, same
     pack/unpack values — so stacked ≡ pipelined ≡ serial per k.
 
     ``blocks``: list of (nbands, npacked_k) coefficient blocks, one per k.
@@ -112,12 +157,10 @@ def apply_hamiltonian_stacked(basis, blocks, v_eff):
     nk = len(blocks)
     if nk == 0:
         return []
-    inv, fwd = basis.stacked_hamiltonian_plans()
-    psi = inv(inv.unpack(inv.stack(blocks)))  # every k and band at once
-    vpsi = fwd(psi * v_eff)                   # apply V, truncate back
-    vc = inv.split(inv.pack(vpsi))
-    return [basis.kinetic(ik)[None, :] * blocks[ik] + vc[ik]
-            for ik in range(nk)]
+    inv, _ = basis.stacked_hamiltonian_plans()
+    c_pad = inv.stack(blocks).reshape(nk, inv.nbands, inv.npacked_max)
+    hc = apply_hamiltonian_padded(basis, c_pad, v_eff)
+    return inv.split(hc.reshape(nk * inv.nbands, inv.npacked_max))
 
 
 def orthonormalize(c):
@@ -128,9 +171,32 @@ def orthonormalize(c):
     return (q * ph[None, :]).T
 
 
-def _project_out(d, c):
-    """Remove the span of rows of ``c`` from rows of ``d``."""
-    return d - (jnp.conj(c) @ d.T).T @ c
+def _pad_lanes(x, npm: int):
+    """Zero-pad the packed-coefficient axis of ``x`` to ``npm`` lanes.
+
+    Both band-update engines contract their Gram/descent linalg over
+    exactly ``npacked_max`` lanes — f32 GEMM reductions are *not*
+    invariant under zero-padding the contraction length (the kernel's
+    blocking changes with it), so running the per-k oracle over npk
+    lanes and the stacked engine over npacked_max would leave an ~1e-5
+    reduction-noise gap between mathematically identical results.
+    Padding both to the same length makes the two engines execute
+    identical kernels on identical operands: bitwise agreement, not
+    approximate.
+    """
+    return jnp.pad(x, ((0, 0), (0, npm - x.shape[-1])))
+
+
+def _padded_precond(basis, ik: int):
+    """Per-k Teter damping row, zero-padded to npacked_max lanes.
+
+    Valid lanes carry the same f32 ``1/(1 + kinetic)`` arithmetic as the
+    stacked ``precond`` table row (bitwise), built locally so the per-k
+    fallback never touches the band-tables cache entry — its plan-cache
+    ledger stays purely per-k traffic.
+    """
+    pre = 1.0 / (1.0 + basis.kinetic(ik))
+    return jnp.pad(pre, (0, basis.npacked_max - pre.shape[0]))
 
 
 def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
@@ -139,58 +205,160 @@ def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
     Per step: residuals r_b = (H − λ_b)c_b, preconditioned and
     orthonormalized against the bands, then a Rayleigh-Ritz solve in
     span{c, P r} keeps the lowest ``nbands`` vectors.  Two batched H
-    applies per step.
+    applies per step, riding the per-k sphere plans; the linalg runs as
+    singleton-batch dispatches of the stacked kernels over
+    npacked_max-padded lanes (:func:`_pad_lanes`), so this serial oracle
+    and the batched engine agree bit for bit.
 
     Returns (rotated coefficients, eigenvalues ascending, n_h_applies).
     """
-    kin = basis.kinetic(ik)
-    pre = (1.0 / (1.0 + kin))[None, :]
+    npm = basis.npacked_max
+    pre = _padded_precond(basis, ik)
     napply = 0
     eps = None
     c = _replicated(basis, c)
     for _ in range(steps):
         hc = _replicated(basis, apply_hamiltonian(basis, ik, c, v_eff))
         napply += 1
-        d = _replicated(basis, _descent_direction(c, hc, pre))
+        d = _replicated(basis, _descent_direction(c, hc, pre, npm))
         hd = _replicated(basis, apply_hamiltonian(basis, ik, d, v_eff))
         napply += 1
-        c, eps = _rayleigh_ritz(c, d, hc, hd)
+        c, eps = _rayleigh_ritz(c, d, hc, hd, npm)
     return c, eps, napply
 
 
-def _descent_direction(c, hc, pre):
-    """Preconditioned residual block, orthonormalized against the bands."""
-    lam = jnp.sum(jnp.conj(c) * hc, axis=1).real
-    grad = hc - lam[:, None] * c
-    return orthonormalize(_project_out(pre * grad, c))
+def _descent_direction(c, hc, pre, npm: int):
+    """Per-k preconditioned residual block, orthogonal to the bands.
+
+    A singleton-batch dispatch of :func:`_descent_direction_stacked`
+    over npacked_max-padded operands — one per-k eager linalg call,
+    counted by ``PERK_LINALG_CALLS``.  ``pre`` is the padded per-k
+    damping row.  Returns the unpadded (nbands, npk) block.
+    """
+    global PERK_LINALG_CALLS
+    PERK_LINALG_CALLS += 1
+    npk = c.shape[-1]
+    d = _descent_direction_stacked(_pad_lanes(c, npm)[None],
+                                   _pad_lanes(hc, npm)[None], pre[None])
+    return d[0, :, :npk]
 
 
-def _rayleigh_ritz(c, d, hc, hd):
-    """Lowest-nb Ritz vectors of span{c, d}; returns (c', eps ascending)."""
-    nb = c.shape[0]
-    basis_block = jnp.concatenate([c, d], axis=0)            # (2nb, np)
-    h_block = jnp.concatenate([hc, hd], axis=0)
-    hmat = jnp.conj(basis_block) @ h_block.T                 # ⟨b_i|H|b_j⟩
-    eps, vecs = jnp.linalg.eigh(0.5 * (hmat + jnp.conj(hmat).T))
-    return orthonormalize(vecs[:, :nb].T @ basis_block), eps[:nb]
+def _rayleigh_ritz(c, d, hc, hd, npm: int):
+    """Per-k lowest-nb Ritz vectors of span{c, d}; (c', eps ascending).
+
+    Singleton-batch dispatch of :func:`_rayleigh_ritz_stacked` over
+    npacked_max-padded blocks — one per-k eager linalg call, counted by
+    ``PERK_LINALG_CALLS``.
+    """
+    global PERK_LINALG_CALLS
+    PERK_LINALG_CALLS += 1
+    npk = c.shape[-1]
+    cp, eps = _rayleigh_ritz_stacked(
+        _pad_lanes(c, npm)[None], _pad_lanes(d, npm)[None],
+        _pad_lanes(hc, npm)[None], _pad_lanes(hd, npm)[None])
+    return cp[0, :, :npk], eps[0]
+
+
+# ------------------------------------------------- stacked (batched) engine
+def _orthonormalize_stacked(c):
+    """Batched QR re-orthonormalization over (nk, nbands, npacked_max).
+
+    Each k's matrix is the per-k one with zero rows appended for the
+    padded lanes; Householder QR keeps those rows exactly zero (the
+    reflectors never mix them in), so padding survives the batched solve
+    untouched and the valid lanes match :func:`orthonormalize` bitwise.
+    """
+    q, r = jnp.linalg.qr(jnp.swapaxes(c, -1, -2))       # (nk, np, nb)
+    ph = jnp.sign(jnp.real(
+        jnp.diagonal(r, axis1=-2, axis2=-1)) + 1e-30)   # (nk, nb)
+    return jnp.swapaxes(q * ph[:, None, :], -1, -2)
+
+
+def _descent_direction_stacked(c, hc, pre):
+    """Batched preconditioned residuals, orthogonal to the current bands.
+
+    The per-k ``_descent_direction`` as three einsums over the stacked
+    axis: Rayleigh quotients, the projected gradient, and the
+    projection of span{c} out of the preconditioned block.  ``pre`` is
+    the masked table, so padded lanes come out exact zeros.
+    """
+    lam = jnp.real(jnp.sum(jnp.conj(c) * hc, axis=-1))  # (nk, nb)
+    grad = hc - lam[..., None] * c
+    d = pre[:, None, :] * grad
+    ovl = jnp.einsum("kip,kjp->kij", jnp.conj(c), d)    # ⟨c_i|d_j⟩ per k
+    return _orthonormalize_stacked(
+        d - jnp.einsum("kij,kip->kjp", ovl, c))
+
+
+def _rayleigh_ritz_stacked(c, d, hc, hd):
+    """Batched lowest-nb Ritz vectors of span{c, d} for every k at once.
+
+    One (nk, 2nb, 2nb) blocked Gram build (padded lanes add exact zeros),
+    one nk-batched dense ``eigh``, one batched back-rotation — no per-k
+    Python dispatch anywhere.  Returns (c', eps) with eps ascending per k.
+    """
+    nb = c.shape[1]
+    bb = jnp.concatenate([c, d], axis=1)                # (nk, 2nb, np)
+    hb = jnp.concatenate([hc, hd], axis=1)
+    hmat = jnp.einsum("kip,kjp->kij", jnp.conj(bb), hb)
+    hmat = 0.5 * (hmat + jnp.conj(jnp.swapaxes(hmat, -1, -2)))
+    eps, vecs = jnp.linalg.eigh(hmat)                   # nk-batched solve
+    new = jnp.einsum("kin,kip->knp", vecs[:, :, :nb], bb)
+    return _orthonormalize_stacked(new), eps[:, :nb]
+
+
+def update_bands_stacked(basis, c_pad, v_eff, *, steps: int = 3,
+                         tables=None):
+    """Locally-optimal band update on the padded (nk, nbands, npacked_max)
+    coefficient stack — every stage batched over k.
+
+    The per-k math of :func:`update_bands` with the orchestration layer
+    removed: each step is two stacked H sweeps (two distributed
+    transforms each, via :func:`apply_hamiltonian_padded`), one batched
+    descent-direction build, and one nk-batched blocked Rayleigh-Ritz
+    solve — a handful of XLA calls total, none of them per-k.  Padded
+    lanes carry exact zeros end to end (zero coefficients, zero table
+    entries, zero Gram contributions), so results on valid lanes equal
+    the per-k path bitwise on CPU.  Fully traceable — the jitted SCF
+    step runs it under ``jax.jit`` with donated buffers.
+
+    Returns (updated stack, eigenvalues (nk, nbands) ascending per k,
+    H sweeps executed).
+    """
+    if tables is None:
+        tables = basis.stacked_band_tables()
+    kin, pre = tables.kinetic, tables.precond
+    c = _replicated(basis, c_pad)
+    eps = None
+    nsweep = 0
+    for _ in range(steps):
+        hc = _replicated(basis,
+                         apply_hamiltonian_padded(basis, c, v_eff, kin))
+        nsweep += 1
+        d = _replicated(basis, _descent_direction_stacked(c, hc, pre))
+        hd = _replicated(basis,
+                         apply_hamiltonian_padded(basis, d, v_eff, kin))
+        nsweep += 1
+        c, eps = _rayleigh_ritz_stacked(c, d, hc, hd)
+    return c, eps, nsweep
 
 
 def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3,
                        stacked: bool | None = None):
-    """All-k locally-optimal band update — stacked or pipelined H sweeps.
+    """All-k locally-optimal band update — stacked engine or pipelined per-k.
 
     The per-k math is :func:`update_bands` exactly — same preconditioner,
-    same Rayleigh-Ritz step, same op order within each k — but the loop
-    nest is inverted (steps outer, k inner) so each step's two H-apply
-    sweeps cover every k-point at once.  ``stacked=None`` (the default)
-    routes each sweep through :func:`apply_hamiltonian_stacked` when
-    ``basis.stacks_k`` — one ragged nk·nbands batch, two distributed
-    transforms per sweep — and falls back to
-    :func:`apply_hamiltonian_pipelined` (k+1's sphere→cube all_to_alls
-    dispatched before k's potential apply) otherwise; pass True/False to
-    force a path, e.g. to use the pipelined loop as the equivalence
-    oracle.  Because no arithmetic crosses k-points, both routes match
-    running ``update_bands`` serially per k.
+    same Rayleigh-Ritz step, same op order within each k.
+    ``stacked=None`` (the default) routes through
+    :func:`update_bands_stacked` when ``basis.stacks_k`` — the whole
+    update runs on one padded (nk, nbands, npacked_max) stack, two
+    distributed transforms per sweep and zero per-k Python linalg — and
+    falls back to the pipelined per-k loop (k+1's sphere→cube
+    all_to_alls dispatched before k's potential apply, Gram/Rayleigh-Ritz
+    per k) otherwise; pass True/False to force a path, e.g. to use the
+    pipelined loop as the equivalence oracle.  Because no arithmetic
+    crosses k-points, both routes match running ``update_bands`` serially
+    per k.
 
     Returns (new coefficient blocks, eigenvalues list [(nbands,)] per k,
     H sweeps executed — each sweep is one H apply per k-point).
@@ -198,21 +366,30 @@ def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3,
     nk = len(coeffs)
     if stacked is None:
         stacked = bool(getattr(basis, "stacks_k", False))
-    sweep = apply_hamiltonian_stacked if stacked \
-        else apply_hamiltonian_pipelined
+    if stacked:
+        inv, _ = basis.stacked_hamiltonian_plans()
+        c_pad = inv.stack(coeffs).reshape(nk, inv.nbands, inv.npacked_max)
+        c_pad, eps, nsweep = update_bands_stacked(basis, c_pad, v_eff,
+                                                  steps=steps)
+        cs = inv.split(c_pad.reshape(nk * inv.nbands, inv.npacked_max))
+        return cs, [eps[ik] for ik in range(nk)], nsweep
+    npm = basis.npacked_max
     cs = [_replicated(basis, c) for c in coeffs]
-    pres = [(1.0 / (1.0 + basis.kinetic(ik)))[None, :] for ik in range(nk)]
+    pres = [_padded_precond(basis, ik) for ik in range(nk)]
     eps_out = [None] * nk
     nsweep = 0
     for _ in range(steps):
-        hcs = [_replicated(basis, hc) for hc in sweep(basis, cs, v_eff)]
+        hcs = [_replicated(basis, hc)
+               for hc in apply_hamiltonian_pipelined(basis, cs, v_eff)]
         nsweep += 1
         ds = [_replicated(basis,
-                          _descent_direction(cs[ik], hcs[ik], pres[ik]))
+                          _descent_direction(cs[ik], hcs[ik], pres[ik],
+                                             npm))
               for ik in range(nk)]
-        hds = [_replicated(basis, hd) for hd in sweep(basis, ds, v_eff)]
+        hds = [_replicated(basis, hd)
+               for hd in apply_hamiltonian_pipelined(basis, ds, v_eff)]
         nsweep += 1
         for ik in range(nk):
-            cs[ik], eps_out[ik] = _rayleigh_ritz(cs[ik], ds[ik],
-                                                 hcs[ik], hds[ik])
+            cs[ik], eps_out[ik] = _rayleigh_ritz(cs[ik], ds[ik], hcs[ik],
+                                                 hds[ik], npm)
     return cs, eps_out, nsweep

@@ -11,11 +11,25 @@ Anderson/Pulay acceleration on the stored residual history.  Convergence is
 declared when |ΔE| stays below ``e_tol`` (and the density residual below
 ``r_tol``) after the warm-up.
 
-The orchestration is deliberately eager Python: every transform goes
+The orchestration is eager Python by default: every transform goes
 through a plan fetched from the process-global ``PlanCache`` (the per-plan
 executors are jitted ``shard_map``s), so the cache's hit counter is the
 subsystem's plan-reuse ledger and ``SCFResult.transforms`` counts real
 batched 3D transforms.
+
+``SCFConfig(jit_step=True)`` (requires the stacked band-update route)
+fuses one whole outer iteration — v_eff build, the stacked band update,
+density rebuild, total energy, residual, **and the density mixing** —
+into a single jit-compiled step with donated density/band/mixer buffers:
+after the first trace, an SCF iteration is one XLA dispatch with zero
+per-k Python work.  Plans and band tables are fetched from the PlanCache
+eagerly at trace time, so cache traffic stays honestly accounted (it is
+counted once per trace, not once per iteration — the whole point);
+``SCFResult.transforms`` keeps the same analytic per-iteration count as
+the eager path.  The mixer runs in f32 inside the step (the eager
+AndersonMixer accumulates its DIIS history in f64), so jitted and eager
+runs agree to mixing precision, not bitwise; with plain linear mixing
+(``mix_history<=1``) the two paths perform identical f32 arithmetic.
 """
 from __future__ import annotations
 
@@ -24,14 +38,17 @@ import time
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import ProcGrid, global_plan_cache
 from repro.core.policy import ExecPolicy
 
 from .basis import PlaneWaveBasis
-from .density import density_from_orbitals, electron_count
-from .hamiltonian import orthonormalize, update_bands, update_bands_all_k
+from .density import (density_from_orbitals, density_from_stacked,
+                      electron_count)
+from .hamiltonian import (orthonormalize, update_bands, update_bands_all_k,
+                          update_bands_stacked)
 from .hartree import HartreeSolver
 from .potentials import gaussian_wells, lda_exchange
 
@@ -96,6 +113,62 @@ class AndersonMixer:
         return jnp.asarray(mixed.astype(np.float32).reshape(rho_in.shape))
 
 
+# ------------------------------------------------------------- jitted mixing
+def jit_mixer_init(nvol: int, history: int):
+    """Mixer state for the fused (jit-compiled) SCF step.
+
+    Linear mixing (``history <= 1``) needs only the iteration counter;
+    Anderson/Pulay keeps fixed-size ρ_in/residual history buffers (rows
+    ordered oldest→newest, zero-filled until ``seen`` fills them) so the
+    state is a fixed-shape pytree the step can donate and return.
+    """
+    state = {"seen": jnp.zeros((), jnp.int32)}
+    if history > 1:
+        state["rho_in"] = jnp.zeros((history, nvol), jnp.float32)
+        state["res"] = jnp.zeros((history, nvol), jnp.float32)
+    return state
+
+
+def jit_mix(state, rho_in, rho_out, *, alpha: float, warmup: int):
+    """One mixing step inside the fused sweep; returns (state', ρ_mixed).
+
+    The traceable twin of ``AndersonMixer.mix``/``LinearMixer.mix``: the
+    same bordered DIIS system with rows that are not yet (or no longer)
+    in the history pinned to identity rows, the same linear-mixing
+    fallback for the warm-up iterations and whenever the solve goes
+    non-finite.  Runs in f32 (the eager mixer accumulates in f64), and
+    with ``history <= 1`` it is exactly the eager linear mixer's f32
+    arithmetic.
+    """
+    rin = rho_in.reshape(-1)
+    res = rho_out.reshape(-1) - rin
+    seen = state["seen"] + 1
+    linear = rin + jnp.float32(alpha) * res
+    if "rho_in" not in state:                     # plain linear mixing
+        return {"seen": seen}, linear.reshape(rho_in.shape)
+    h = state["rho_in"].shape[0]
+    rho_hist = jnp.concatenate([state["rho_in"][1:], rin[None]], axis=0)
+    res_hist = jnp.concatenate([state["res"][1:], res[None]], axis=0)
+    m = jnp.minimum(seen, h)
+    valid = jnp.arange(h) >= h - m                # newest rows are valid
+    r = res_hist * valid[:, None].astype(res_hist.dtype)
+    a = r @ r.T
+    vf = valid.astype(a.dtype)
+    a = a * (vf[:, None] * vf[None, :])           # invalid rows/cols → 0
+    a = a + jnp.diag(1.0 - vf)                    # … pinned to identity
+    top = jnp.concatenate([a, vf[:, None]], axis=1)
+    bot = jnp.concatenate([vf, jnp.zeros((1,), a.dtype)])[None, :]
+    rhs = jnp.zeros((h + 1,), a.dtype).at[h].set(1.0)
+    beta = jnp.linalg.solve(jnp.concatenate([top, bot], axis=0), rhs)[:h]
+    beta = beta * vf
+    mixed = beta @ (rho_hist + jnp.float32(alpha) * res_hist)
+    use_linear = ((seen <= warmup) | (m < 2)
+                  | ~jnp.all(jnp.isfinite(beta)))
+    out = jnp.where(use_linear, linear, mixed)
+    state = {"seen": seen, "rho_in": rho_hist, "res": res_hist}
+    return state, out.reshape(rho_in.shape)
+
+
 # -------------------------------------------------------------------- config
 @dataclasses.dataclass
 class SCFConfig:
@@ -120,6 +193,10 @@ class SCFConfig:
     stack_k: bool | None = None       # ragged-stack the H apply across k
                                       # (None: auto via basis.stacks_k;
                                       # True requires pipeline=True)
+    jit_step: bool = False            # fuse mixing + band update + density
+                                      # into one jitted step with donated
+                                      # buffers (requires the stacked
+                                      # band-update route)
     batch_axes: tuple | None = None   # grid axes carrying the band batch
     fft_axes: tuple | None = None     # grid axes carrying the transforms
     policy: ExecPolicy | None = None
@@ -142,10 +219,18 @@ class SCFResult:
     grid_shape: tuple = ()            # processing-grid shape the run used
     stacked: bool = False             # H sweeps rode the k-stacked batch
     padding_fraction: float = 0.0     # padded lanes / (nk · npacked_max)
+    band_update: str = "per-k"        # band-update route: "stacked" (the
+                                      # batched engine) or "per-k"
+    jitted: bool = False              # iterations ran as the fused jit step
 
     @property
     def transforms_per_s(self) -> float:
         return self.transforms / max(self.seconds, 1e-9)
+
+    @property
+    def seconds_per_iteration(self) -> float:
+        """Mean wall time of one outer SCF iteration."""
+        return self.seconds / max(self.iterations, 1)
 
 
 # -------------------------------------------------------------------- energy
@@ -173,7 +258,110 @@ def total_energy(basis, coeffs, rho, v_ext, hartree: HartreeSolver, occ,
                    "xc": e_xc, "total": total}
 
 
+def total_energy_stacked(basis, c_pad, rho, v_ext, hartree: HartreeSolver,
+                         occ, *, xc: bool = True, tables=None):
+    """Traceable E[{ψ}, ρ] on the padded (nk, nbands, npacked_max) stack.
+
+    The kinetic term is one masked einsum against the dense padded
+    kinetic table (padded lanes contribute exact zeros), everything else
+    is cube arithmetic — no per-k Python, no host transfers, so the
+    fused jit step can inline it.  Accumulates in f32 where the eager
+    :func:`total_energy` reduces per-band terms in host f64; the two
+    agree to f32 reduction precision (~1e-6 on the demo problems).
+    """
+    if tables is None:
+        tables = basis.stacked_band_tables()
+    w = jnp.asarray((basis.weights[:, None] * np.asarray(occ, np.float64)
+                     ).astype(np.float32))                  # (nk, nb)
+    per_band = jnp.sum(tables.kinetic[:, None, :] * jnp.abs(c_pad) ** 2,
+                       axis=-1)
+    e_kin = jnp.sum(w * per_band)
+    dv = jnp.float32(basis.dv)
+    e_ext = jnp.sum(rho * v_ext) * dv
+    vh = hartree(rho)
+    e_h = jnp.sum(rho * vh) * (0.5 * dv)
+    e_xc = jnp.sum(lda_exchange(rho)[0]) * dv if xc else 0.0
+    return e_kin + e_ext + e_h + e_xc
+
+
 # -------------------------------------------------------------------- driver
+def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
+                  nelec: float, coeffs, callback):
+    """The fused SCF loop: one jit-compiled step per outer iteration.
+
+    Everything the eager loop does per iteration — v_eff build, the
+    stacked band update, density rebuild, total energy, residual, density
+    mixing — is traced into a single XLA computation with the density,
+    band-coefficient and mixer buffers donated, so iterations after the
+    first dispatch no per-k Python work at all.  Plans and band tables
+    come from the process-global PlanCache *eagerly at trace time* (the
+    fetches below and inside the first ``step`` call), which keeps cache
+    traffic honestly accounted: one fetch per traced transform, zero per
+    steady-state iteration.
+
+    Returns (energies, residuals, eigs, ρ_out, transforms, converged,
+    seconds) with the same accounting semantics as the eager loop.
+    """
+    inv, _ = basis.stacked_hamiltonian_plans()
+    tables = basis.stacked_band_tables()
+    c_pad = inv.stack(coeffs).reshape(basis.nk, basis.nbands,
+                                      inv.npacked_max)
+    rho = density_from_stacked(basis, c_pad, occ)
+    mix_state = jit_mixer_init(basis.n ** 3, cfg.mix_history)
+    inelec = 1.0 / max(nelec, 1e-9)
+
+    def step(rho, c_pad, mix_state):
+        vh = hartree(rho)
+        v_eff = v_ext + vh
+        if cfg.xc:
+            v_eff = v_eff + lda_exchange(rho)[1]
+        c_new, eps, _ = update_bands_stacked(
+            basis, c_pad, v_eff, steps=cfg.inner_steps, tables=tables)
+        rho_out = density_from_stacked(basis, c_new, occ)
+        energy = total_energy_stacked(basis, c_new, rho_out, v_ext,
+                                      hartree, occ, xc=cfg.xc,
+                                      tables=tables)
+        resid = (jnp.linalg.norm(rho_out - rho)
+                 * jnp.float32(basis.dv ** 0.5 * inelec))
+        mix_state, rho_next = jit_mix(mix_state, rho, rho_out,
+                                      alpha=cfg.mix_alpha,
+                                      warmup=cfg.mix_warmup)
+        return rho_next, c_new, mix_state, rho_out, eps, energy, resid
+
+    step = jax.jit(step, donate_argnums=(0, 1, 2))
+
+    energies: list[float] = []
+    residuals: list[float] = []
+    eigs = np.zeros((basis.nk, basis.nbands))
+    transforms = 0
+    converged = False
+    rho_out = rho
+    # per-iteration analytic transform count, matching the eager loop:
+    # Hartree pair + band-update sweeps + density + the energy's Hartree
+    per_iter = (2 + 2 * cfg.inner_steps * basis.nk * 2 * basis.nbands
+                + basis.nk * basis.nbands + 2)
+    t0 = time.perf_counter()
+    for it in range(cfg.max_iter):
+        rho, c_pad, mix_state, rho_out, eps, energy, resid = \
+            step(rho, c_pad, mix_state)
+        transforms += per_iter
+        energy = float(energy)
+        resid = float(resid)
+        energies.append(energy)
+        residuals.append(resid)
+        eigs = np.asarray(eps)
+        if callback is not None:
+            callback(it, energy, resid)
+        if (it > cfg.mix_warmup
+                and abs(energies[-1] - energies[-2]) < cfg.e_tol
+                and resid < cfg.r_tol):
+            converged = True
+            break
+    seconds = time.perf_counter() - t0
+    return energies, residuals, eigs, rho_out, transforms, converged, \
+        seconds
+
+
 def _init_coefficients(basis, seed: int):
     rng = np.random.default_rng(seed)
     coeffs = []
@@ -221,72 +409,90 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         raise ValueError("stack_k=True requires pipeline=True (the "
                          "stacked route sweeps all k-points per step; "
                          "pipeline=False runs the serial per-k loop)")
+    stacked = bool(stack_k and cfg.pipeline)
+    if cfg.jit_step and not stacked:
+        # the fused step is built on the padded stacked engine — running
+        # it per-k would re-introduce the dispatch overhead it removes
+        raise ValueError("jit_step=True requires the stacked band-update "
+                         "route (stack_k=True, or a grid satisfying "
+                         "basis.stacks_k with stack_k left on auto)")
 
     coeffs = _init_coefficients(basis, cfg.seed)
-    rho = density_from_orbitals(basis, coeffs, occ)
-    mixer = AndersonMixer(cfg.mix_alpha, cfg.mix_history, cfg.mix_warmup) \
-        if cfg.mix_history > 1 else LinearMixer(cfg.mix_alpha)
 
-    energies: list[float] = []
-    residuals: list[float] = []
-    eigs = np.zeros((basis.nk, basis.nbands))
-    # counter and timer both cover the SCF loop only: the warm-up density
-    # build above (plan construction + first traces) is excluded from both
-    transforms = 0
-    converged = False
-    t0 = time.perf_counter()
+    if cfg.jit_step:
+        energies, residuals, eigs, rho, transforms, converged, seconds = \
+            _jit_scf_loop(cfg, basis, v_ext, hartree, occ, nelec, coeffs,
+                          callback)
+    else:
+        rho = density_from_orbitals(basis, coeffs, occ)
+        mixer = AndersonMixer(cfg.mix_alpha, cfg.mix_history,
+                              cfg.mix_warmup) \
+            if cfg.mix_history > 1 else LinearMixer(cfg.mix_alpha)
 
-    for it in range(cfg.max_iter):
-        vh = hartree(rho)
-        transforms += 2                            # cube fwd + derived inv
-        v_eff = v_ext + vh
-        if cfg.xc:
-            _, v_x = lda_exchange(rho)
-            v_eff = v_eff + v_x
-        if cfg.pipeline:
-            # all-k loop: stacked H sweeps (one ragged nk·nbands batch)
-            # when the basis stacks k-points, pipelined per-k dispatch
-            # otherwise — per-k math identical to the serial branch below
-            coeffs, eps_list, nsweep = update_bands_all_k(
-                basis, coeffs, v_eff, steps=cfg.inner_steps,
-                stacked=stack_k)
-            for ik in range(basis.nk):
-                eigs[ik] = np.asarray(eps_list[ik])
-            transforms += nsweep * basis.nk * 2 * basis.nbands
-        else:
-            for ik in range(basis.nk):
-                coeffs[ik], eps, napply = update_bands(
-                    basis, ik, coeffs[ik], v_eff, steps=cfg.inner_steps)
-                eigs[ik] = np.asarray(eps)
-                transforms += napply * 2 * basis.nbands
-        rho_out = density_from_orbitals(basis, coeffs, occ)
-        transforms += basis.nk * basis.nbands
-        energy, _ = total_energy(basis, coeffs, rho_out, v_ext, hartree,
-                                 occ, xc=cfg.xc)
-        transforms += 2                            # energy's Hartree solve
-        resid = float(jnp.linalg.norm(rho_out - rho)
-                      * basis.dv ** 0.5) / max(nelec, 1e-9)
-        energies.append(energy)
-        residuals.append(resid)
-        if callback is not None:
-            callback(it, energy, resid)
-        if (it > cfg.mix_warmup
-                and abs(energies[-1] - energies[-2]) < cfg.e_tol
-                and resid < cfg.r_tol):
-            converged = True
-            break
-        rho = mixer.mix(rho, rho_out)
+        energies = []
+        residuals = []
+        eigs = np.zeros((basis.nk, basis.nbands))
+        # counter and timer both cover the SCF loop only: the warm-up
+        # density build above (plan construction + first traces) is
+        # excluded from both
+        transforms = 0
+        converged = False
+        t0 = time.perf_counter()
 
-    seconds = time.perf_counter() - t0
+        for it in range(cfg.max_iter):
+            vh = hartree(rho)
+            transforms += 2                        # cube fwd + derived inv
+            v_eff = v_ext + vh
+            if cfg.xc:
+                _, v_x = lda_exchange(rho)
+                v_eff = v_eff + v_x
+            if cfg.pipeline:
+                # all-k loop: the batched stacked engine (one ragged
+                # nk·nbands stack, einsum Gram/Rayleigh-Ritz) when the
+                # basis stacks k-points, pipelined per-k dispatch
+                # otherwise — per-k math identical to the serial branch
+                coeffs, eps_list, nsweep = update_bands_all_k(
+                    basis, coeffs, v_eff, steps=cfg.inner_steps,
+                    stacked=stack_k)
+                for ik in range(basis.nk):
+                    eigs[ik] = np.asarray(eps_list[ik])
+                transforms += nsweep * basis.nk * 2 * basis.nbands
+            else:
+                for ik in range(basis.nk):
+                    coeffs[ik], eps, napply = update_bands(
+                        basis, ik, coeffs[ik], v_eff,
+                        steps=cfg.inner_steps)
+                    eigs[ik] = np.asarray(eps)
+                    transforms += napply * 2 * basis.nbands
+            rho_out = density_from_orbitals(basis, coeffs, occ)
+            transforms += basis.nk * basis.nbands
+            energy, _ = total_energy(basis, coeffs, rho_out, v_ext,
+                                     hartree, occ, xc=cfg.xc)
+            transforms += 2                        # energy's Hartree solve
+            resid = float(jnp.linalg.norm(rho_out - rho)
+                          * basis.dv ** 0.5) / max(nelec, 1e-9)
+            energies.append(energy)
+            residuals.append(resid)
+            if callback is not None:
+                callback(it, energy, resid)
+            if (it > cfg.mix_warmup
+                    and abs(energies[-1] - energies[-2]) < cfg.e_tol
+                    and resid < cfg.r_tol):
+                converged = True
+                break
+            rho = mixer.mix(rho, rho_out)
+
+        seconds = time.perf_counter() - t0
+        # return the density the orbitals actually produced (not the mixed
+        # guess) — coeffs are unchanged since the loop's last rho_out
+        rho = rho_out if energies \
+            else density_from_orbitals(basis, coeffs, occ)
+
     cache1 = global_plan_cache().stats
     delta = {k: cache1[k] - cache0.get(k, 0)
              for k in ("hits", "misses", "evictions")}
     delta["size"] = cache1["size"]
-    # return the density the orbitals actually produced (not the mixed
-    # guess) — coeffs are unchanged since the loop's last rho_out
-    rho = rho_out if energies else density_from_orbitals(basis, coeffs, occ)
     assert abs(electron_count(basis, rho) - nelec) < 1e-3 * max(nelec, 1.0)
-    stacked = bool(stack_k and cfg.pipeline)
     padding = (basis.stacked_hamiltonian_plans()[0].padding_fraction
                if stacked else 0.0)
     return SCFResult(
@@ -295,4 +501,6 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         energies=energies, residuals=residuals, eigenvalues=eigs, rho=rho,
         transforms=transforms, seconds=seconds, cache_stats=delta,
         grid_shape=tuple(basis.grid.shape), stacked=stacked,
-        padding_fraction=padding)
+        padding_fraction=padding,
+        band_update="stacked" if stacked else "per-k",
+        jitted=bool(cfg.jit_step))

@@ -40,10 +40,16 @@ def choose_dft_grid_shape(ndevices: int, *, nbands: int, diameter: int,
     is a hard ``PlaneWaveBasis`` requirement.  Among qualifying splits,
     one that satisfies the full ``basis.stacks_k`` contract — ``nk | pb``
     and ``pb | nk·nbands``, so the stacked nk·nbands Hamiltonian/density
-    batch shards evenly — is preferred (it collapses every per-k dispatch
-    into one ragged batched transform).  Falls back to ``(ndevices,)``
-    when no split qualifies (the basis's own divisibility checks then
-    produce the actionable error).
+    batch shards evenly — is preferred (it engages the batched band-update
+    engine: the whole sweep becomes two distributed transforms plus a
+    handful of batched XLA calls).  The degradation ladder when the
+    preferences cannot be met: a qualifying split whose ``pb`` the
+    k-point count does not divide still wins over 1D (the basis then runs
+    the pipelined per-k fallback on it, ``stacks_k`` False), and when no
+    split divides at all — prime device counts, ``nbands`` smaller than
+    or coprime to every feasible ``pb`` — the chooser falls back to
+    ``(ndevices,)`` (the basis's own divisibility checks then produce
+    the actionable error).
     """
     if ndevices < 1:
         raise ValueError(f"ndevices must be >= 1, got {ndevices}")

@@ -12,17 +12,21 @@ if REPO not in sys.path:
     sys.path.insert(0, REPO)
 
 from benchmarks.compare import compare_records  # noqa: E402
+from benchmarks.compare import drifted_scenarios  # noqa: E402
 from benchmarks.compare import main as compare_main  # noqa: E402
 from benchmarks.compare import unknown_scenarios  # noqa: E402
 from benchmarks.run import (atomic_json_dump,  # noqa: E402
-                            scf_2d_grid_shape, scf_stacked_grid_shape)
+                            require_stacked_route, scf_2d_grid_shape,
+                            scf_stacked_grid_shape)
 
 
-def _record(tps=200.0, grid=(4,), converged=True, devices=4):
+def _record(tps=200.0, grid=(4,), converged=True, devices=4,
+            band_update="per-k"):
     return {
         "scenario": {"n": 16, "nbands": 4, "devices": devices,
                      "quick": True},
         "grid_shape": list(grid),
+        "band_update": band_update,
         "converged": converged,
         "transforms_per_s": tps,
     }
@@ -65,6 +69,22 @@ def test_gate_fails_on_config_mismatch():
     cur3 = {"scf-2d": dict(_record(400.0, grid=(2, 2)), stacked=True)}
     assert any("stacked changed" in f
                for f in compare_records(cur3, base3))
+    # … and a silent band-update fallback (stacked engine → per-k loop)
+    # is caught the same way, even at *higher* measured throughput
+    base4 = {"scf-stacked": _record(grid=(2, 2), band_update="stacked")}
+    cur4 = {"scf-stacked": _record(500.0, grid=(2, 2),
+                                   band_update="per-k")}
+    assert any("band_update changed" in f
+               for f in compare_records(cur4, base4))
+
+
+def test_require_stacked_route_refuses_fallback_records():
+    """scf-stacked/scf-jit must refuse to emit a per-k record — a silent
+    fallback would be gated against stacked baselines."""
+    rec = _record(grid=(2, 2), band_update="stacked")
+    assert require_stacked_route(rec, "scf-stacked") is rec
+    with pytest.raises(SystemExit, match="band-update route"):
+        require_stacked_route(_record(grid=(2, 2)), "scf-stacked")
 
 
 def test_gate_extra_current_scenarios_are_fine():
@@ -94,10 +114,35 @@ def test_gate_missing_tps_is_failure_not_keyerror():
     assert any("transforms_per_s" in f for f in failures)
 
 
+# ------------------------------------------------------------ drift check
+def test_drifted_scenarios_both_directions():
+    """Drift triggers on >FRAC movement either way; config-mismatched and
+    baseline-missing scenarios are the gate's business, never drift's."""
+    base = {"scf": _record(200.0), "scf-2d": _record(200.0, grid=(2, 2))}
+    assert drifted_scenarios({"scf": _record(215.0),
+                              "scf-2d": _record(200.0, grid=(2, 2))},
+                             base, 0.10) == []
+    up = drifted_scenarios({"scf": _record(230.0),
+                            "scf-2d": _record(200.0, grid=(2, 2))},
+                           base, 0.10)
+    assert [(n, round(f, 2)) for n, _, _, f in up] == [("scf", 0.15)]
+    down = drifted_scenarios({"scf": _record(170.0),
+                              "scf-2d": _record(200.0, grid=(2, 2))},
+                             base, 0.10)
+    assert down[0][0] == "scf" and down[0][3] < 0
+    # a config mismatch is excluded from drift (the gate reports it)
+    assert drifted_scenarios({"scf": _record(400.0, grid=(2, 2)),
+                              "scf-2d": _record(200.0, grid=(2, 2))},
+                             base, 0.10) == []
+    # unknown/missing scenarios never drift
+    assert drifted_scenarios({"scf-2d": _record(200.0, grid=(2, 2))},
+                             base, 0.10) == []
+
+
 # --------------------------------------------------------------- CLI paths
 def _dump(path, scenarios):
     with open(path, "w") as f:
-        json.dump({"schema": 2, "scenarios": scenarios}, f)
+        json.dump({"schema": 3, "scenarios": scenarios}, f)
 
 
 def test_compare_main_exit_codes(tmp_path, capsys):
@@ -125,6 +170,32 @@ def test_compare_main_unknown_scenario_warns_and_passes(tmp_path, capsys):
     _dump(cur, {"scf": _record(100.0),
                 "scf-stacked": _record(400.0, grid=(2, 2))})
     assert compare_main([str(cur), str(base)]) == 1
+
+
+def test_compare_main_check_drift_exit_codes(tmp_path, capsys):
+    """The drift-automation protocol: 0 = green/no drift, 1 = gate failed
+    (drift never evaluated), 2 = gate green but drifted — the scheduled
+    workflow keys the baseline-refresh PR on exit 2."""
+    cur, base = tmp_path / "cur.json", tmp_path / "base.json"
+    _dump(base, {"scf": _record(200.0)})
+    _dump(cur, {"scf": _record(205.0)})
+    assert compare_main([str(cur), str(base), "--check-drift", "0.10"]) == 0
+    assert "no drift" in capsys.readouterr().out
+    _dump(cur, {"scf": _record(260.0)})        # +30%: gate green, drifted
+    assert compare_main([str(cur), str(base), "--check-drift", "0.10"]) == 2
+    out = capsys.readouterr().out
+    assert "BASELINE STALE" in out and "--update-baseline" in out
+    _dump(cur, {"scf": _record(100.0)})        # -50%: gate failure wins
+    assert compare_main([str(cur), str(base), "--check-drift", "0.10"]) == 1
+    # a scenario the baseline doesn't know is a refresh signal too —
+    # the automation is what onboards freshly added benchmarks
+    _dump(cur, {"scf": _record(205.0),
+                "scf-new": _record(300.0, grid=(2, 2))})
+    assert compare_main([str(cur), str(base), "--check-drift", "0.10"]) == 2
+    assert "not in the baseline yet" in capsys.readouterr().out
+    # without --check-drift the fast run still exits 0 (pure gate)
+    _dump(cur, {"scf": _record(260.0)})
+    assert compare_main([str(cur), str(base)]) == 0
 
 
 def test_compare_main_update_baseline(tmp_path):

@@ -197,6 +197,37 @@ def test_choose_dft_grid_shape_rules():
     assert choose_dft_grid_shape(4, nbands=3, diameter=7) == (4,)
 
 
+def test_choose_dft_grid_shape_edge_cases():
+    """Prime device counts, nk not dividing the batch extent, and
+    nbands < ndevices: the chooser degrades predictably — a non-stackable
+    2D split when one exists (basis then runs the pipelined fallback),
+    the 1D fft grid when nothing divides."""
+    from repro.sharding.grids import choose_dft_grid_shape
+    # prime device counts past the pencil limit: the only fft factors
+    # dividing both ndevices and the diameter are 1 (and pb = ndevices
+    # never divides nbands) → 1D fallback, never a crash
+    for p in (5, 7, 11, 13):
+        assert choose_dft_grid_shape(p, nbands=4, diameter=8) == (p,)
+    # nk not dividing any feasible batch factor: the stacks_k contract is
+    # unmet, but a valid (pb | nbands) split still beats 1D — the basis
+    # simply runs the pipelined per-k fallback on it (stacks_k False)
+    assert choose_dft_grid_shape(4, nbands=4, diameter=8, nk=3) == (2, 2)
+    assert choose_dft_grid_shape(8, nbands=4, diameter=8, nk=3) == (4, 2)
+    b = PlaneWaveBasis(16, kpts=((0, 0, 0), (0.3, 0, 0), (0, 0.3, 0)),
+                       nbands=4, grid=ProcGrid.create_abstract([2, 2]))
+    assert not b.stacks_k                     # nk=3 ∤ pb=2 → fallback
+    # nbands smaller than every candidate batch factor → 1D fallback
+    # (16 devices, d=16: pf ≤ 4 by the pencil rule, so pb ∈ {4, 8, 16},
+    # none of which divides nbands ≤ 2)
+    assert choose_dft_grid_shape(8, nbands=1, diameter=8) == (8,)
+    assert choose_dft_grid_shape(16, nbands=2, diameter=16, nk=2) == (16,)
+    assert choose_dft_grid_shape(16, nbands=3, diameter=8, nk=2) == (16,)
+    # nbands ≥ the batch factor but not divisible → still 1D
+    assert choose_dft_grid_shape(4, nbands=5, diameter=8) == (4,)
+    # … while a composite nbands that does divide keeps the 2D split
+    assert choose_dft_grid_shape(4, nbands=6, diameter=8) == (2, 2)
+
+
 # ------------------------------------------------------ pipelined k-loop
 def test_pipelined_hamiltonian_matches_serial(basis2):
     rng = np.random.default_rng(7)
@@ -332,6 +363,104 @@ def test_stacked_band_update_matches_serial(basis2):
     assert float(jnp.abs(rho_k - rho_s).max()) < 1e-10
 
 
+def test_stacked_band_tables_cached_and_exact(basis2):
+    """The dense kinetic/mask/precond tables: padded lanes exactly zero,
+    valid lanes bitwise-equal to the per-k ladders, and one PlanCache
+    entry (second fetch is a hit, same object, no schedule search)."""
+    cache = global_plan_cache()
+    tab = basis2.stacked_band_tables()
+    npm = basis2.npacked_max
+    assert tab.kinetic.shape == tab.mask.shape == tab.precond.shape \
+        == (basis2.nk, npm)
+    for ik in range(basis2.nk):
+        npk = basis2.npacked(ik)
+        kin = np.asarray(basis2.kinetic(ik))
+        np.testing.assert_array_equal(np.asarray(tab.kinetic[ik, :npk]),
+                                      kin)
+        np.testing.assert_array_equal(
+            np.asarray(tab.precond[ik, :npk]),
+            np.asarray(1.0 / (1.0 + basis2.kinetic(ik))))
+        assert np.asarray(tab.mask[ik, :npk]).all()
+        for a in (tab.kinetic, tab.mask, tab.precond):
+            assert np.abs(np.asarray(a[ik, npk:])).max(initial=0.0) == 0.0
+    hits = cache.stats["hits"]
+    searches = FftPlan.searches
+    tab2 = basis2.stacked_band_tables()
+    assert tab2 is tab
+    assert cache.stats["hits"] == hits + 1
+    assert FftPlan.searches == searches
+
+
+def test_stacked_engine_two_transforms_per_sweep_no_perk_linalg(basis2):
+    """Acceptance instrumentation: one stacked band-update sweep is
+    exactly two distributed transforms (one batched inverse, one batched
+    forward — however many k-points ride it) and zero per-k Python
+    linalg dispatches; the pipelined fallback pays 2·nk transforms and
+    2·nk linalg calls per step."""
+    from repro.dft import hamiltonian as H
+    rng = np.random.default_rng(21)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    coeffs = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    basis2.stacked_hamiltonian_plans()          # warm the plan cache
+    ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
+    _, _, nsweep = update_bands_all_k(basis2, coeffs, v, steps=2,
+                                      stacked=True)
+    assert nsweep == 4
+    assert FftPlan.executions - ex0 == 2 * nsweep      # 2 per sweep
+    assert H.PERK_LINALG_CALLS - pk0 == 0              # fully batched
+    ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
+    update_bands_all_k(basis2, coeffs, v, steps=2, stacked=False)
+    assert FftPlan.executions - ex0 == 2 * nsweep * basis2.nk
+    assert H.PERK_LINALG_CALLS - pk0 == 2 * 2 * basis2.nk
+
+
+def test_scf_jit_step_matches_eager_and_dispatches_only_at_trace(basis2):
+    """Acceptance: the fused jit step reproduces the eager stacked run
+    (identical f32 linear mixing ⇒ energies agree to f32 energy-reduction
+    precision) and performs zero per-iteration Python transform
+    dispatches — the FftPlan execution count is identical for 3- and
+    6-iteration runs (trace-time only) with zero per-k linalg calls."""
+    from repro.dft import hamiltonian as H
+    g1 = basis2.grid
+    cfg = dict(n=16, nbands=3, kpts=KPTS2, max_iter=6, mix_warmup=99,
+               mix_history=1)
+    eager = run_scf(SCFConfig(**cfg, stack_k=True), grid=g1)
+    ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
+    jit6 = run_scf(SCFConfig(**cfg, stack_k=True, jit_step=True), grid=g1)
+    d6 = FftPlan.executions - ex0
+    assert H.PERK_LINALG_CALLS - pk0 == 0
+    assert jit6.jitted and jit6.band_update == "stacked"
+    assert jit6.transforms == eager.transforms   # same analytic ledger
+    assert jit6.iterations == eager.iterations == 6
+    assert abs(jit6.energy - eager.energy) < 1e-4
+    assert np.abs(jit6.eigenvalues - eager.eigenvalues).max() < 1e-4
+    assert float(jnp.abs(jit6.rho - eager.rho).max()) \
+        < 1e-4 * float(eager.rho.max())
+    ex0 = FftPlan.executions
+    jit3 = run_scf(SCFConfig(**dict(cfg, max_iter=3), stack_k=True,
+                             jit_step=True), grid=g1)
+    assert jit3.iterations == 3
+    assert FftPlan.executions - ex0 == d6    # dispatches ∝ traces, not its
+    # the fused step needs the stacked engine — per-k fallback is refused
+    with pytest.raises(ValueError, match="jit_step=True requires"):
+        run_scf(SCFConfig(**cfg, stack_k=False, jit_step=True), grid=g1)
+
+
+def test_scf_jit_step_anderson_converges(basis2):
+    """Full Anderson-mixed jitted SCF converges to the eager answer (the
+    jitted DIIS runs in f32 against the eager mixer's f64 history, so the
+    bound is mixing precision, not bitwise)."""
+    res = run_scf(SCFConfig(n=16, nbands=4, kpts=KPTS2, max_iter=50,
+                            stack_k=True, jit_step=True),
+                  grid=basis2.grid)
+    assert res.converged, (res.energies, res.residuals)
+    assert res.jitted and res.stacked
+    assert abs(res.energy - (-1.9197)) < 5e-3, res.energy
+    for eps in res.eigenvalues:
+        assert np.all(np.diff(eps) >= -1e-6)
+
+
 def test_scf_stack_k_flag_equivalent(basis2):
     """run_scf(stack_k=True) ≡ run_scf(stack_k=False): forcing the ragged
     stacked H sweeps changes dispatch, not results — the pipelined path
@@ -388,11 +517,14 @@ def test_scf_2d_grid_4dev(dist):
     host devices — bands sharded over the batch axis, k-points stacked
     into the ragged nk·nbands batch for both the density build and the
     Hamiltonian apply — plus stacked ≡ pipelined ≡ serial H applies and
-    band updates to 1e-10 on the distributed grid."""
+    band updates to 1e-10 on the distributed grid, the batched engine's
+    two-transforms-per-sweep / zero-per-k-linalg instrumentation, and the
+    fused jit step converging on the distributed grid."""
     script = """
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import ProcGrid, global_plan_cache
+from repro.core import FftPlan, ProcGrid, global_plan_cache
 from repro.dft import PlaneWaveBasis, SCFConfig, run_scf
+from repro.dft import hamiltonian as Hmod
 from repro.dft.density import density_from_orbitals, electron_count
 from repro.dft.hamiltonian import (apply_hamiltonian,
                                    apply_hamiltonian_pipelined,
@@ -441,7 +573,13 @@ serial, eps_ser = [], []
 for ik in range(2):
     ck, ek, _ = update_bands(basis, ik, coeffs[ik], v, steps=2)
     serial.append(ck); eps_ser.append(ek)
-stacked, eps_stk, _ = update_bands_all_k(basis, coeffs, v, steps=2)  # stacks
+ex0, pk0 = FftPlan.executions, Hmod.PERK_LINALG_CALLS
+stacked, eps_stk, nsweep = update_bands_all_k(basis, coeffs, v, steps=2)
+# batched-engine instrumentation holds on the distributed grid too:
+# each sweep is exactly two distributed transforms (one batched inverse,
+# one batched forward, all nk*nbands orbitals aboard), zero per-k linalg
+assert FftPlan.executions - ex0 == 2 * nsweep, FftPlan.executions - ex0
+assert Hmod.PERK_LINALG_CALLS - pk0 == 0
 for ik in range(2):
     assert float(jnp.abs(stacked[ik] - serial[ik]).max()) < 1e-10
     assert float(jnp.abs(eps_stk[ik] - eps_ser[ik]).max()) < 1e-10
@@ -464,9 +602,23 @@ res = run_scf(cfg, grid=grid)
 assert res.converged, (res.energies, res.residuals)
 assert res.grid_shape == (2, 2)
 assert res.stacked and res.padding_fraction > 0.0
+assert res.band_update == "stacked" and not res.jitted
 assert cache.stats["misses"] == misses0 + 1   # only the cube plan is new
 assert abs(res.energy - (-1.9197)) < 5e-3, res.energy
-print("OK", res.iterations, round(res.energy, 5))
+
+# the fused jit step on the same grid: every plan already cached (zero
+# new misses), zero per-k linalg, converges to the eager stacked energy
+# to mixing precision (its DIIS runs in f32)
+misses1 = cache.stats["misses"]
+pk0 = Hmod.PERK_LINALG_CALLS
+resj = run_scf(SCFConfig(n=16, nbands=4, kpts=((0,0,0),(0.5,0.5,0.5)),
+                         max_iter=50, jit_step=True), grid=grid)
+assert resj.converged, (resj.energies, resj.residuals)
+assert resj.jitted and resj.band_update == "stacked"
+assert cache.stats["misses"] == misses1
+assert Hmod.PERK_LINALG_CALLS == pk0
+assert abs(resj.energy - res.energy) < 1e-3, (resj.energy, res.energy)
+print("OK", res.iterations, resj.iterations, round(res.energy, 5))
 """
     out = dist(script, n_devices=4)
     assert "OK" in out

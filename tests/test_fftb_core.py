@@ -5,7 +5,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import Domain, DistTensor, ProcGrid, fftb, parse_dims
+from repro.core import (Domain, DistTensor, ExecPolicy, ProcGrid, fftb,
+                        parse_dims)
 from repro.core.layout import Move, apply_move, plan_redistribution
 from repro.core.plan import FFTStage, MoveStage
 
@@ -119,35 +120,22 @@ def test_inverse_fft_1device():
 
 
 # ---------------------------------------------------- legacy positional API
-def test_legacy_positional_fftb_shim():
-    """The paper's C++-style signature keeps working (with a warning)."""
-    g = ProcGrid.create([1])
-    b = Domain((0,), (1,))
-    dom = Domain((0, 0, 0), (7, 7, 7))
-    ti = DistTensor.create((b, dom), "b x{0} y z", g)
-    to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-    with pytest.warns(DeprecationWarning):
-        plan = fftb((8, 8, 8), to, "X Y Z", ti, "x y z", g)
-    rng = np.random.default_rng(0)
-    x = (rng.standard_normal((2, 8, 8, 8))
-         + 1j * rng.standard_normal((2, 8, 8, 8))).astype(np.complex64)
-    y = np.asarray(plan(jnp.asarray(x)))
-    ref = np.fft.fftn(x, axes=(1, 2, 3))
-    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
-
-
-def test_legacy_shim_matches_builder_plan():
+def test_legacy_positional_fftb_removed_with_migration_hint():
+    """The deprecated C++-style signature (PR 1's two-PR grace window has
+    elapsed) now raises a TypeError that carries the migration recipe —
+    never silently misinterprets the positional arguments."""
     g = ProcGrid.create_abstract([4])
     b = Domain((0,), (3,))
     dom = Domain((0, 0, 0), (15, 15, 15))
     ti = DistTensor.create((b, dom), "b x{0} y z", g)
     to = DistTensor.create((b, dom), "B X Y Z{0}", g)
-    with pytest.warns(DeprecationWarning):
-        old = fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g)
+    with pytest.raises(TypeError, match="has been removed"):
+        fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g)
+    with pytest.raises(TypeError, match="arrow spec"):
+        fftb((16, 16, 16), to, "X Y Z", ti, "x y z", g)
+    # the arrow-spec builder the hint points at works for the same plan
     new = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
-    assert [type(s) for s in old.stages] == [type(s) for s in new.stages]
-    assert old.flop_count() == new.flop_count()
-    assert old.comm_stats() == new.comm_stats()
+    assert new.tin.shape == (4, 16, 16, 16)
 
 
 # ------------------------------------------------ distributed (subprocess)
@@ -210,7 +198,7 @@ def test_lazy_executor_matches_eager():
                      + 1j * rng.standard_normal((2, 16, 16, 16))
                      ).astype(np.complex64))
     ye = np.asarray(plan(x))
-    yl = np.asarray(plan(x, mode="lazy"))
+    yl = np.asarray(plan(x, policy=ExecPolicy(mode="lazy")))
     np.testing.assert_allclose(yl, ye, rtol=1e-4, atol=1e-3)
 
 
@@ -224,7 +212,7 @@ def test_lazy_bf16_executor_precision_bounded():
                      + 1j * rng.standard_normal((2, 16, 16, 16))
                      ).astype(np.complex64))
     ye = np.asarray(plan(x))
-    yb = np.asarray(plan(x, mode="lazy_bf16"))
+    yb = np.asarray(plan(x, policy=ExecPolicy.from_mode("lazy_bf16")))
     rel = np.abs(yb - ye).max() / np.abs(ye).max()
     assert rel < 3e-2, rel          # bf16 storage, f32 accumulation
 
@@ -240,7 +228,8 @@ fx = fftb("b x{0} y z -> b X Y Z{0}", domains=(b, dom), grid=g)
 rng = np.random.default_rng(0)
 x = (rng.standard_normal((nb,n,n,n)) + 1j*rng.standard_normal((nb,n,n,n))).astype(np.complex64)
 ref = np.fft.fftn(x, axes=(1,2,3))
-y = np.asarray(fx(jnp.asarray(x), mode="lazy"))
+from repro.core import ExecPolicy
+y = np.asarray(fx(jnp.asarray(x), policy=ExecPolicy(mode="lazy")))
 assert np.abs(y-ref).max()/np.abs(ref).max() < 2e-6
 print("OK")
 """

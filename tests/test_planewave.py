@@ -180,18 +180,23 @@ def test_stacked_pair_shares_inner_plan_and_accounts_tables():
     assert "Stacked" in inv.describe()
 
 
-def test_from_tensors_without_sphere_raises_value_error():
-    """A plan request whose packed side has no SphereDomain must fail with
-    a clear ValueError (used to escape as a bare StopIteration)."""
-    from repro.core import Domain, DistTensor, PlaneWaveFFT
-    g = ProcGrid.create([1])
-    b = Domain((0,), (1,))
-    cube = Domain((0, 0, 0), (7, 7, 7))
-    ti = DistTensor.create((b, cube), "b x y z", g)
-    to = DistTensor.create((b, cube), "b X Y Z", g)
-    with pytest.raises(ValueError, match="SphereDomain"):
-        PlaneWaveFFT.from_tensors((8, 8, 8), to, ("X", "Y", "Z"),
-                                  ti, ("x", "y", "z"), g, inverse=True)
+def test_padded_kinetic_table_matches_perk_ladders():
+    """The dense (nk, npacked_max) kinetic table agrees bitwise with the
+    per-k ladders on valid lanes and is exactly zero on padded lanes."""
+    import numpy as np
+    from repro.core import padded_kinetic_table
+    from repro.dft import PlaneWaveBasis
+    g = ProcGrid.create([1], ["pw_kin"])
+    b = PlaneWaveBasis(16, kpts=((0, 0, 0), (0.5, 0.5, 0.5)), nbands=2,
+                       grid=g)
+    kin, valid = padded_kinetic_table(b.spheres, b.L)
+    assert kin.shape == valid.shape == (2, b.npacked_max)
+    for ik in range(2):
+        npk = b.npacked(ik)
+        assert valid[ik, :npk].all() and not valid[ik, npk:].any()
+        np.testing.assert_array_equal(kin[ik, :npk],
+                                      np.asarray(b.kinetic(ik)))
+        assert (kin[ik, npk:] == 0.0).all()
 
 
 def test_staged_moves_less_data_than_padded():

@@ -267,20 +267,24 @@ def test_planewave_derived_forward_no_second_search(g1):
 
 # ------------------------------------------------------------- ExecPolicy
 def test_policy_replaces_mode_strings(g1):
+    """Policies are the only call-site switch now: the legacy ``mode=``
+    keyword was removed with the positional fftb signature, and legacy
+    strings convert only at config boundaries via ExecPolicy.from_mode."""
     dom = Domain((0, 0, 0), (15, 15, 15))
     plan = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1,
                 policy=ExecPolicy(mode="lazy"))
     rng = np.random.default_rng(7)
     x = _rand_c64(rng, (16, 16, 16))
     ref = np.fft.fftn(x)
-    # default policy (lazy) and legacy mode string agree
+    # default policy (lazy) and per-call override agree
     np.testing.assert_allclose(np.asarray(plan(jnp.asarray(x))), ref,
                                rtol=1e-4, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(plan(jnp.asarray(x),
-                                               mode="eager")),
-                               ref, rtol=1e-4, atol=1e-3)
-    with pytest.raises(ValueError):
-        plan(jnp.asarray(x), mode="eager", policy=ExecPolicy())
+    np.testing.assert_allclose(
+        np.asarray(plan(jnp.asarray(x),
+                        policy=ExecPolicy.from_mode("eager"))),
+        ref, rtol=1e-4, atol=1e-3)
+    with pytest.raises(TypeError):
+        plan(jnp.asarray(x), mode="eager")          # shim is gone
 
 
 def test_policy_legacy_mode_mapping():
