@@ -10,7 +10,12 @@ the committed ``benchmarks/baseline.json``:
 Exit 1 when any scenario's ``transforms_per_s`` regressed more than the
 tolerance, when a baseline scenario disappeared from the current run, or
 when a scenario stopped converging — a silently dropped scenario must not
-read as a pass.  Scenario configs (devices, quick flag, grid shape) are
+read as a pass.  Scenarios whose baseline records serving metrics (the
+``serve-transform`` mixed-tenant trace) additionally gate
+``requests_per_s`` (same tolerance, higher-is-better) and
+``latency_p99_ms`` (twice the tolerance, lower-is-better — p99 on shared
+runners is noisier than sustained throughput); SCF scenarios carry
+neither and are unaffected.  Scenario configs (devices, quick flag, grid shape) are
 checked too, as are the *route* fields ``pipeline``/``stacked``/
 ``band_update``: a scenario that silently fell back from the stacked
 band-update engine to the per-k path is a different configuration, not a
@@ -55,6 +60,17 @@ import sys
 #: pipeline flag measures a different configuration, not a perf delta)
 CONFIG_KEYS = ("grid_shape", "scenario", "pipeline", "stacked",
                "band_update")
+
+#: serving metrics gated *when the baseline record carries them* (the
+#: serve-transform scenario does; SCF scenarios don't and are unaffected).
+#: ``transforms_per_s`` stays universal and required.  Each entry is
+#: (record key, display name, direction); "lower" metrics (latency) gate
+#: at twice the throughput tolerance — p99 on shared CI runners is far
+#: noisier than sustained throughput, and a 20% latency gate would flake.
+SERVE_METRICS = (
+    ("requests_per_s", "requests/s", "higher"),
+    ("latency_p99_ms", "p99 latency (ms)", "lower"),
+)
 
 
 def load_scenarios(path: str) -> dict:
@@ -115,6 +131,33 @@ def compare_records(current: dict, baseline: dict,
                 f"{name}: transforms/s regressed {base_tps:.1f} -> "
                 f"{cur_tps:.1f} ({cur_tps / base_tps - 1.0:+.1%}, "
                 f"tolerance -{tolerance:.0%})")
+        # serving metrics: gated only for scenarios whose baseline
+        # records them (see SERVE_METRICS) — a baseline metric the
+        # current run dropped is a failure, never a silent pass
+        for key, label, direction in SERVE_METRICS:
+            bv = base.get(key)
+            if bv is None:
+                continue
+            cv = cur.get(key)
+            if cv is None:
+                failures.append(
+                    f"{name}: record lacks {key} (baseline={bv}, "
+                    "current=None); regenerate with benchmarks/run.py")
+                continue
+            bv, cv = float(bv), float(cv)
+            if direction == "higher":
+                if cv < bv * (1.0 - tolerance):
+                    failures.append(
+                        f"{name}: {label} regressed {bv:.1f} -> {cv:.1f} "
+                        f"({cv / bv - 1.0:+.1%}, tolerance "
+                        f"-{tolerance:.0%})")
+            else:
+                lat_tol = 2.0 * tolerance
+                if cv > bv * (1.0 + lat_tol):
+                    failures.append(
+                        f"{name}: {label} regressed {bv:.1f} -> {cv:.1f} "
+                        f"({cv / bv - 1.0:+.1%}, tolerance "
+                        f"+{lat_tol:.0%})")
     return failures
 
 

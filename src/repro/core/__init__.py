@@ -10,9 +10,9 @@ from .grid import ProcGrid
 from .local_fft import dft_matrix, local_dft
 from .plan import FftPlan, Plan
 from .planewave import (PlaneWaveFFT, StackedPlaneWaveFFT, cube_spec,
-                        make_planewave_pair, make_stacked_planewave_pair,
-                        padded_kinetic_table, padded_pack_tables,
-                        planewave_spec, sphere_gvectors,
+                        kpoint_sphere, make_planewave_pair,
+                        make_stacked_planewave_pair, padded_kinetic_table,
+                        padded_pack_tables, planewave_spec, sphere_gvectors,
                         sphere_kinetic_row)
 from .policy import ExecPolicy
 from .spectral import fft_conv, fourier_mixer
@@ -21,7 +21,8 @@ __all__ = [
     "Domain", "SphereDomain", "sphere_for_cutoff", "DistTensor",
     "parse_dims", "parse_transform_spec", "dims_string", "Transform",
     "fftb", "ProcGrid", "dft_matrix", "local_dft", "Plan", "FftPlan",
-    "PlaneWaveFFT", "StackedPlaneWaveFFT", "make_planewave_pair",
+    "PlaneWaveFFT", "StackedPlaneWaveFFT", "kpoint_sphere",
+    "make_planewave_pair",
     "make_stacked_planewave_pair", "padded_kinetic_table",
     "padded_pack_tables", "planewave_spec", "cube_spec",
     "sphere_gvectors", "sphere_kinetic_row",

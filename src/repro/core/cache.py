@@ -134,6 +134,18 @@ class PlanCache:
                 self.evictions += 1
         return plan
 
+    def peek(self, key):
+        """The cached plan for ``key``, or ``None`` — without side effects.
+
+        No hit/miss accounting, no LRU refresh: admission control uses this
+        to ask "would this dispatch need a cold build?" without distorting
+        the stats the real lookup will record or promoting an entry the
+        caller never used.
+        """
+        with self._lock:
+            entry = self._data.get(key)
+            return None if entry is None else entry[0]
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()

@@ -127,6 +127,25 @@ class PlaneWaveFFT(Plan):
                 (self.sphere.extents[0], self.n[0])) + self.plan.describe()
 
 
+def kpoint_sphere(diameter: int, kpt=(0.0, 0.0, 0.0)) -> SphereDomain:
+    """Cut-off sphere of a k-point: diameter ``d``, center shifted by ``k``.
+
+    The single sphere-construction rule shared by the dft basis and the
+    transform service: the Bloch factor moves the cut-off sphere's *center*
+    to c0 + k (c0 the bounding-cube center, k in reduced coordinates), the
+    bounding box stays the d³ cube — so every k-shift of one cutoff is
+    batch-compatible (same extents, different pack tables).
+    """
+    d = int(diameter)
+    kpt = tuple(float(k) for k in kpt)
+    if len(kpt) != 3:
+        raise ValueError(f"kpt must have 3 components, got {kpt}")
+    c0 = (d - 1) / 2.0
+    return SphereDomain(radius=d / 2.0,
+                        center=tuple(c0 + k for k in kpt),
+                        lower=(0, 0, 0), upper=(d - 1,) * 3)
+
+
 def planewave_spec(batch_axes: tuple[int, ...] = (),
                    fft_axes: tuple[int, ...] = (0,)) -> str:
     """Arrow spec for the batched sphere↔cube transform on a given grid.

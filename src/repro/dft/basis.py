@@ -35,10 +35,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Domain, ProcGrid, SphereDomain, cube_spec, fftb,
-                        global_plan_cache, make_stacked_planewave_pair,
-                        padded_kinetic_table, planewave_spec,
-                        sphere_gvectors, sphere_kinetic_row)
+from repro.core import (Domain, ProcGrid, cube_spec, fftb,
+                        global_plan_cache, kpoint_sphere,
+                        make_stacked_planewave_pair, padded_kinetic_table,
+                        planewave_spec, sphere_gvectors, sphere_kinetic_row)
 from repro.core.cache import domains_key, grid_key
 from repro.core.policy import ExecPolicy
 
@@ -163,14 +163,9 @@ class PlaneWaveBasis:
                 raise ValueError("one weight per k-point")
             self.weights = self.weights / self.weights.sum()
 
-        c0 = (self.d - 1) / 2.0
-        self.spheres = [
-            SphereDomain(radius=self.d / 2.0,
-                         center=tuple(c0 + k for k in kp),
-                         lower=(0, 0, 0),
-                         upper=(self.d - 1,) * 3)
-            for kp in self.kpts
-        ]
+        # one construction rule shared with the transform service: same
+        # cutoff ⇒ same bounding box ⇒ batch-compatible pack tables
+        self.spheres = [kpoint_sphere(self.d, kp) for kp in self.kpts]
         self.bdom = Domain((0,), (self.nbands - 1,))
         self.cube = Domain((0, 0, 0), (self.n - 1,) * 3)
         self._kin = [None] * nk

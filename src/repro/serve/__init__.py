@@ -1,0 +1,15 @@
+"""Serving: the LM decode engine and the multi-tenant transform service."""
+
+from .engine import Request, ServeEngine
+from .metrics import ServiceMetrics
+from .scheduler import (CoalescingScheduler, DeadlineExceeded, QueueFull,
+                        ServeError, ServiceStopped, TransformHandle,
+                        TransformRequest, compat_key)
+from .transform_service import TransformService
+
+__all__ = [
+    "Request", "ServeEngine",
+    "TransformService", "TransformRequest", "TransformHandle",
+    "CoalescingScheduler", "ServiceMetrics", "compat_key",
+    "ServeError", "DeadlineExceeded", "QueueFull", "ServiceStopped",
+]

@@ -9,6 +9,7 @@ assigned decode_32k/long_500k cells.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -32,12 +33,16 @@ class ServeEngine:
         self.capacity = capacity
         self.greedy = greedy
         self.params = None
+        self.cache_dtype = cache_dtype
         self.cache = bundle.init_cache(slots, capacity, cache_dtype)
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.active: dict[int, Request] = {}
         self.free = list(range(slots))
+        # 1 where the slot decodes this step — the lengths increment is a
+        # vector add with this mask, not a per-step Python comprehension
+        self._active_mask = np.zeros((slots,), np.int32)
         self._decode = jax.jit(bundle.decode, donate_argnums=(2,))
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.steps = 0
 
     def load(self, params):
@@ -49,11 +54,13 @@ class ServeEngine:
     # ------------------------------------------------------------ admit
     def _admit(self):
         while self.queue and self.free:
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             slot = self.free.pop(0)
-            # per-slot prefill (batch=1 path reuses the bundle prefill)
+            # per-slot prefill (batch=1 path reuses the bundle prefill);
+            # same dtype as the batched cache — _splice's astype must be
+            # an identity, not a silent up/down-cast
             cache1 = self.bundle.init_cache(1, self.capacity,
-                                            jnp.float32)
+                                            self.cache_dtype)
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, cache1 = self.bundle.prefill(self.params, batch, cache1)
             tok = int(jnp.argmax(logits[0, -1]))
@@ -63,6 +70,7 @@ class ServeEngine:
                 lambda big, one: _splice(big, one, slot), self.cache, cache1)
             self.lengths = self.lengths.at[slot].set(len(req.prompt))
             self.active[slot] = req
+            self._active_mask[slot] = 1
 
     # ------------------------------------------------------------- step
     def step(self):
@@ -75,15 +83,14 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(toks), self.cache, self.lengths)
         nxt = jnp.argmax(logits[:, 0], axis=-1)
-        self.lengths = self.lengths + jnp.asarray(
-            [1 if s in self.active else 0 for s in range(self.slots)],
-            jnp.int32)
+        self.lengths = self.lengths + jnp.asarray(self._active_mask)
         nxt = np.asarray(nxt)
         for slot, req in list(self.active.items()):
             req.out.append(int(nxt[slot]))
             if len(req.out) >= req.max_new:
                 req.done = True
                 del self.active[slot]
+                self._active_mask[slot] = 0
                 self.free.append(slot)
         self.steps += 1
 

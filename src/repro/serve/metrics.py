@@ -1,0 +1,132 @@
+"""Observability for the transform service.
+
+Everything the serving story needs to be judged by: per-tenant latency
+percentiles (p50/p99 over submit→resolve wall time), sustained request and
+transform throughput, the *realized* padding fraction of coalesced
+dispatches (the quantity the scheduler's budget bounds), and the shared
+``PlanCache``'s hit rate / resident bytes over the measurement window.
+``summary()`` emits the dict the ``serve-transform`` bench scenario embeds
+in the schema-3 gate record; ``reset()`` restarts the window (benchmarks
+warm plans first, then measure a clean window).
+
+Thread-safe: dispatch loop and tenant threads record concurrently.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+
+def _percentile_ms(samples, q: float) -> float:
+    if not samples:
+        return 0.0
+    return float(np.percentile(np.asarray(samples, np.float64), q) * 1e3)
+
+
+class ServiceMetrics:
+    """Rolling counters + latency reservoirs for one service instance."""
+
+    def __init__(self, cache=None):
+        self._cache = cache
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        """Restart the measurement window (counters, reservoirs, cache
+
+        deltas and the wall clock all restart; plans already cached keep
+        their warmth — that is the point of resetting after warmup)."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+            self._lat: dict[str, list] = {}
+            self._errors: dict[str, int] = {}
+            self.requests = 0
+            self.transforms = 0
+            self.dispatches = 0
+            self.coalesced_dispatches = 0
+            self.rows = 0
+            self._padding: list[float] = []
+            if self._cache is not None:
+                s = self._cache.stats
+                self._cache0 = (s["hits"], s["misses"])
+            else:
+                self._cache0 = (0, 0)
+
+    # ------------------------------------------------------------ recording
+    def record_request(self, tenant: str, latency_s: float,
+                       nbands: int) -> None:
+        with self._lock:
+            self._lat.setdefault(tenant, []).append(float(latency_s))
+            self.requests += 1
+            self.transforms += int(nbands)
+
+    def record_error(self, kind: str) -> None:
+        with self._lock:
+            self._errors[kind] = self._errors.get(kind, 0) + 1
+
+    def record_dispatch(self, nreqs: int, rows: int,
+                        padding_fraction: float) -> None:
+        with self._lock:
+            self.dispatches += 1
+            self.rows += int(rows)
+            if nreqs > 1:
+                self.coalesced_dispatches += 1
+            self._padding.append(float(padding_fraction))
+
+    # ------------------------------------------------------------- queries
+    @property
+    def elapsed(self) -> float:
+        return time.perf_counter() - self._t0
+
+    @property
+    def max_padding_fraction(self) -> float:
+        """Worst realized dispatch padding — the number the budget bounds."""
+        with self._lock:
+            return max(self._padding) if self._padding else 0.0
+
+    def summary(self) -> dict:
+        """The serving record: per-tenant percentiles + service rates.
+
+        All latencies in milliseconds, rates over the window since the
+        last ``reset()``.  Shape is stable — the bench gate reads
+        ``requests_per_s`` and ``latency_p99_ms`` from the top level.
+        """
+        with self._lock:
+            elapsed = max(time.perf_counter() - self._t0, 1e-9)
+            all_lat = [v for lats in self._lat.values() for v in lats]
+            per_tenant = {
+                t: {"requests": len(lats),
+                    "latency_p50_ms": round(_percentile_ms(lats, 50), 3),
+                    "latency_p99_ms": round(_percentile_ms(lats, 99), 3)}
+                for t, lats in sorted(self._lat.items())
+            }
+            pad = self._padding
+            out = {
+                "requests": self.requests,
+                "requests_per_s": round(self.requests / elapsed, 2),
+                "transforms": self.transforms,
+                "transforms_per_s": round(self.transforms / elapsed, 2),
+                "latency_p50_ms": round(_percentile_ms(all_lat, 50), 3),
+                "latency_p99_ms": round(_percentile_ms(all_lat, 99), 3),
+                "dispatches": self.dispatches,
+                "coalesced_dispatches": self.coalesced_dispatches,
+                "rows": self.rows,
+                "padding_fraction_mean": round(
+                    float(np.mean(pad)) if pad else 0.0, 4),
+                "padding_fraction_max": round(
+                    max(pad) if pad else 0.0, 4),
+                "errors": dict(self._errors),
+                "per_tenant": per_tenant,
+            }
+            if self._cache is not None:
+                s = self._cache.stats
+                h = s["hits"] - self._cache0[0]
+                m = s["misses"] - self._cache0[1]
+                out["plan_cache"] = {
+                    "hits": h, "misses": m,
+                    "hit_rate": round(h / max(h + m, 1), 4),
+                    "resident_bytes": s["resident_bytes"],
+                }
+            return out

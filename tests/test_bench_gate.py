@@ -114,6 +114,72 @@ def test_gate_missing_tps_is_failure_not_keyerror():
     assert any("transforms_per_s" in f for f in failures)
 
 
+def _serve_record(rps=40.0, p99=400.0, tps=60.0, converged=True):
+    return {
+        "scenario": {"n": 16, "d": 8, "tenants": 3, "requests": 24,
+                     "devices": 4, "quick": True},
+        "grid_shape": [4],
+        "band_update": "coalesced",
+        "converged": converged,
+        "transforms_per_s": tps,
+        "requests_per_s": rps,
+        "latency_p99_ms": p99,
+    }
+
+
+def test_gate_serve_requests_per_s_regression():
+    """serve-transform baselines gate requests/s like transforms/s."""
+    base = {"serve-transform": _serve_record(40.0)}
+    assert compare_records({"serve-transform": _serve_record(34.0)},
+                           base, tolerance=0.20) == []
+    failures = compare_records({"serve-transform": _serve_record(30.0)},
+                               base, tolerance=0.20)   # -25%
+    assert len(failures) == 1
+    assert "requests/s regressed" in failures[0]
+
+
+def test_gate_serve_p99_latency_regression_at_double_tolerance():
+    """Latency gates lower-is-better at 2× the throughput tolerance."""
+    base = {"serve-transform": _serve_record(p99=400.0)}
+    # +30% p99 is inside the 2×20% latency window
+    assert compare_records({"serve-transform": _serve_record(p99=520.0)},
+                           base, tolerance=0.20) == []
+    failures = compare_records({"serve-transform": _serve_record(p99=600.0)},
+                               base, tolerance=0.20)   # +50% > +40%
+    assert len(failures) == 1
+    assert "p99 latency" in failures[0] and "regressed" in failures[0]
+    # faster-than-baseline latency is never a failure
+    assert compare_records({"serve-transform": _serve_record(p99=100.0)},
+                           base, tolerance=0.20) == []
+
+
+def test_gate_serve_metrics_missing_from_current_is_failure():
+    """A current record that dropped a baseline serving metric fails the
+    gate — and SCF baselines without serving metrics are unaffected."""
+    base = {"serve-transform": _serve_record()}
+    broken = _serve_record()
+    del broken["requests_per_s"]
+    failures = compare_records({"serve-transform": broken}, base)
+    assert any("requests_per_s" in f for f in failures)
+    # scf records carry no serving metrics: nothing extra is demanded
+    assert compare_records({"scf": _record()}, {"scf": _record()}) == []
+    # and a serve metric only in the *current* record gates nothing
+    assert compare_records({"scf": _serve_record(tps=200.0)},
+                           {"scf": dict(_record(200.0), **{
+                               "scenario": _serve_record()["scenario"],
+                               "grid_shape": [4],
+                               "band_update": "coalesced"})}) == []
+
+
+def test_gate_serve_unhealthy_run_fails():
+    """converged=False on a serve record (requests dropped/errored) fails
+    exactly like a non-converged SCF."""
+    base = {"serve-transform": _serve_record()}
+    failures = compare_records(
+        {"serve-transform": _serve_record(converged=False)}, base)
+    assert any("converge" in f for f in failures)
+
+
 # ------------------------------------------------------------ drift check
 def test_drifted_scenarios_both_directions():
     """Drift triggers on >FRAC movement either way; config-mismatched and

@@ -1,0 +1,125 @@
+"""PlanCache under real contention — the transform service's hot state.
+
+N threads hammering M distinct sphere-plan keys must behave like the
+single-threaded cache: exactly one insert wins per key (everyone holds the
+winner), ``resident_bytes`` never exceeds ``max_bytes`` after eviction
+churn, and hits + misses account for every lookup.
+"""
+import threading
+
+from repro.core import PlanCache
+
+N_THREADS = 8
+M_KEYS = 12
+
+
+class _FakePlan:
+    """A plan double with the byte-accounting protocol (cheap to build)."""
+
+    def __init__(self, key, nbytes=50_000):
+        self.key = key
+        self.nbytes = nbytes
+
+    def estimated_bytes(self):
+        return self.nbytes
+
+    def shared_table_bytes(self):
+        # two "DFT tables" shared across every fake plan of the same size
+        return {("tab", self.nbytes, False): 1000,
+                ("tab", self.nbytes, True): 1000}
+
+
+def _hammer(cache, keys, rounds, results, barrier, builds):
+    def worker(tid):
+        barrier.wait(timeout=30)
+        got = {}
+        for r in range(rounds):
+            for k in keys:
+                def build(k=k):
+                    builds.append(k)
+                    return _FakePlan(k)
+                got[k] = cache.get_or_build(("sphere-key", k), build)
+        results[tid] = got
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert all(not t.is_alive() for t in threads)
+
+
+def test_contended_no_duplicate_insert_wins():
+    """All threads racing all keys: one winner per key, stats consistent."""
+    cache = PlanCache(maxsize=2 * M_KEYS)
+    results, builds = {}, []
+    barrier = threading.Barrier(N_THREADS)
+    rounds = 5
+    _hammer(cache, range(M_KEYS), rounds, results, barrier, builds)
+    # every thread ends holding the same (winning) object per key
+    for k in range(M_KEYS):
+        winners = {id(results[t][k]) for t in range(N_THREADS)}
+        assert len(winners) == 1, f"key {k}: {len(winners)} distinct plans"
+        assert cache.peek(("sphere-key", k)) is results[0][k]
+    s = cache.stats
+    lookups = N_THREADS * rounds * M_KEYS
+    assert s["hits"] + s["misses"] == lookups
+    # exactly one miss per key — racing losers count as hits, and losing
+    # duplicate builds (len(builds) may exceed M_KEYS) were all discarded
+    assert s["misses"] == M_KEYS
+    assert len(builds) >= M_KEYS
+    assert s["evictions"] == 0 and len(cache) == M_KEYS
+
+
+def test_contended_eviction_respects_byte_budget():
+    """Churn under a byte budget ~3 entries wide: the budget holds at
+    every step, not just at the end."""
+    plan_bytes = 50_000
+    cache = PlanCache(maxsize=256, max_bytes=3 * plan_bytes + 2000)
+    results, builds = {}, []
+    barrier = threading.Barrier(N_THREADS)
+    stop = threading.Event()
+    violations = []
+
+    def monitor():
+        while not stop.is_set():
+            rb = cache.resident_bytes
+            if rb > cache.max_bytes:
+                violations.append(rb)
+
+    mon = threading.Thread(target=monitor)
+    mon.start()
+    try:
+        _hammer(cache, range(M_KEYS), 4, results, barrier, builds)
+    finally:
+        stop.set()
+        mon.join(timeout=10)
+    assert not violations, f"resident_bytes exceeded budget: {violations}"
+    assert cache.resident_bytes <= cache.max_bytes
+    s = cache.stats
+    assert s["evictions"] > 0                    # churn actually happened
+    assert s["hits"] + s["misses"] == N_THREADS * 4 * M_KEYS
+    # every key was (re)built at least once; evicted keys re-miss
+    assert s["misses"] >= M_KEYS
+    assert len(cache) <= 3 + 1                   # ~budget ÷ entry size
+
+
+def test_peek_is_side_effect_free():
+    cache = PlanCache()
+    assert cache.peek("cold") is None
+    p = cache.get_or_build("k", lambda: _FakePlan("k"))
+    s0 = cache.stats
+    assert cache.peek("k") is p
+    assert cache.peek("cold") is None
+    assert cache.stats == s0                     # no hit/miss/LRU movement
+
+
+def test_stress_entry_count_cap_still_enforced():
+    """maxsize (entry-count ceiling) holds under the same contention."""
+    cache = PlanCache(maxsize=4)
+    results = {}
+    barrier = threading.Barrier(N_THREADS)
+    _hammer(cache, range(M_KEYS), 2, results, barrier, [])
+    assert len(cache) <= 4
+    assert cache.stats["evictions"] >= M_KEYS - 4

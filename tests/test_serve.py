@@ -67,6 +67,60 @@ def test_continuous_batching_more_requests_than_slots(tiny):
     assert r0.out == reqs[0].out
 
 
+def test_cache_dtype_respected_by_prefill_splice(tiny):
+    """The per-slot prefill cache must use the engine's cache_dtype: with
+    a bf16 engine nothing in the KV cache may round-trip through f32
+    (splice's astype must be an identity cast)."""
+    import dataclasses
+    cfg, bundle, params = tiny
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 5, dtype=np.int32)
+    seen = []
+
+    def spy(batch, capacity, dtype):
+        seen.append((batch, dtype))
+        return bundle.init_cache(batch, capacity, dtype)
+
+    spied = dataclasses.replace(bundle, init_cache=spy)
+    eng = ServeEngine(spied, slots=1, capacity=64,
+                      cache_dtype=jnp.bfloat16)
+    assert eng.cache_dtype == jnp.bfloat16
+    eng.load(params)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=2))
+    eng.run_until_done()
+    # both the batched cache and every per-slot prefill cache: bf16
+    assert len(seen) >= 2
+    assert all(dt == jnp.bfloat16 for _, dt in seen)
+    assert all(leaf.dtype == jnp.bfloat16
+               for leaf in jax.tree.leaves(eng.cache))
+
+
+def test_queue_is_deque_and_mask_tracks_active(tiny):
+    """Admission queue pops from the left in O(1); the per-step lengths
+    increment comes from the maintained active-slot mask."""
+    from collections import deque
+    cfg, bundle, params = tiny
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(bundle, slots=2, capacity=64)
+    eng.load(params)
+    assert isinstance(eng.queue, deque)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4,
+                                               dtype=np.int32), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    # two admitted (FIFO), one still queued; mask mirrors active slots
+    assert [r.rid for r in eng.queue] == [2]
+    assert sorted(eng._active_mask.tolist()) == [1, 1]
+    assert set(np.flatnonzero(eng._active_mask)) == set(eng.active)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert eng._active_mask.tolist() == [0, 0]
+    # lengths advanced once per active step: prompt + generated - 1
+    assert np.asarray(eng.lengths).tolist() == [4 + 3 - 1, 4 + 3 - 1]
+
+
 def test_slot_reuse(tiny):
     cfg, bundle, params = tiny
     rng = np.random.default_rng(2)
