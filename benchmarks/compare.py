@@ -74,13 +74,50 @@ SERVE_METRICS = (
 
 
 def load_scenarios(path: str) -> dict:
+    """Scenario dict of a BENCH_scf.json — schemas 2 through 4.
+
+    Schema 4 adds a per-scenario ``metrics`` delta (obs-registry window);
+    schema-3 baselines stay loadable through the transition — comparisons
+    read specific keys, and ``metrics`` is attribution, never gated.
+    """
     with open(path) as f:
         record = json.load(f)
     if not isinstance(record, dict) or "scenarios" not in record:
         raise SystemExit(
-            f"{path}: not a schema-2/3 BENCH_scf.json (missing "
+            f"{path}: not a schema-2/3/4 BENCH_scf.json (missing "
             "'scenarios'); regenerate with benchmarks/run.py")
     return record["scenarios"]
+
+
+def phase_attribution(rec: dict) -> list[str]:
+    """Hints from a schema-4 record's embedded obs-metrics delta.
+
+    When a scenario regressed, the counter deltas often say *where*: a
+    burst of plan builds (cache thrash), extra transform executions, or
+    per-k linalg calls (the stacked engine falling back).  Purely
+    advisory — absent metrics (schema-3 records) yield no hints.
+    """
+    m = rec.get("metrics")
+    if not isinstance(m, dict):
+        return []
+    # deltas can go negative when a scenario clears the plan cache inside
+    # its window — only positive counts are meaningful hints
+    hints: list[str] = []
+    pc = m.get("plan_cache") or {}
+    if pc.get("builds", 0) > 0:
+        hints.append(f"{pc['builds']} plan build(s), "
+                     f"{max(pc.get('build_seconds', 0.0), 0.0):.3f}s "
+                     "building")
+    if pc.get("evictions", 0) > 0:
+        hints.append(f"{pc['evictions']} cache eviction(s)")
+    fftb = m.get("fftb") or {}
+    if fftb.get("executions", 0) > 0:
+        hints.append(f"{fftb['executions']} transform execution(s)")
+    dft = m.get("dft") or {}
+    if dft.get("per_k_linalg_calls", 0) > 0:
+        hints.append(f"{dft['per_k_linalg_calls']} per-k linalg call(s) "
+                     "— stacked engine may have fallen back")
+    return hints
 
 
 def unknown_scenarios(current: dict, baseline: dict) -> list[str]:
@@ -131,6 +168,11 @@ def compare_records(current: dict, baseline: dict,
                 f"{name}: transforms/s regressed {base_tps:.1f} -> "
                 f"{cur_tps:.1f} ({cur_tps / base_tps - 1.0:+.1%}, "
                 f"tolerance -{tolerance:.0%})")
+            hints = phase_attribution(cur)
+            if hints:
+                failures.append(
+                    f"{name}: this run's metrics window — "
+                    + "; ".join(hints))
         # serving metrics: gated only for scenarios whose baseline
         # records them (see SERVE_METRICS) — a baseline metric the
         # current run dropped is a failure, never a silent pass

@@ -15,10 +15,12 @@ batch×fft 2D grid, ``scf-stacked`` with the batched stacked band-update
 engine on the same 2D grid, ``scf-jit`` adding the fused jit-compiled SCF
 step — each recording its grid shape, padding fraction, band-update route
 and per-iteration wall time) additionally write machine-readable
-schema-3 ``BENCH_scf.json`` (transforms/s, iterations to convergence,
-plan-cache hit rate) so the perf trajectory can be tracked across
-commits; CI's bench-trajectory job uploads it and gates regressions
-against ``benchmarks/baseline.json`` via ``benchmarks/compare.py``.  The
+schema-4 ``BENCH_scf.json`` (transforms/s, iterations to convergence,
+plan-cache hit rate, plus a per-scenario ``metrics`` delta from the
+``repro.obs`` registry so regressions attribute to a phase) so the perf
+trajectory can be tracked across commits; CI's bench-trajectory job
+uploads it and gates regressions against ``benchmarks/baseline.json``
+via ``benchmarks/compare.py`` (schema-3 baselines still load).  The
 ``band_update`` field rides the record so the gate catches a silent
 fallback from the stacked engine to the per-k path; the stacked/jit
 scenarios additionally hard-fail here if the route they exist to measure
@@ -26,7 +28,7 @@ did not engage.  The JSON is written atomically (temp file + rename) so
 an interrupted run can't leave a truncated artifact.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
-         [--scenarios scf,scf-2d,scf-stacked,scf-jit]
+         [--scenarios scf,scf-2d,scf-stacked,scf-jit] [--trace-out PATH]
 """
 from __future__ import annotations
 
@@ -56,6 +58,7 @@ def _timeit(fn, *args, warmup=2, iters=5):
 
 def bench_table1(rows):
     """Paper Table 1 — capabilities, as executable probes."""
+    import jax
     import jax.numpy as jnp
     from repro.core import (ProcGrid, SphereDomain, Domain, fftb,
                             make_planewave_pair)
@@ -63,12 +66,15 @@ def bench_table1(rows):
     t0 = time.perf_counter()
     dom = Domain((0, 0, 0), (15, 15, 15))
     fx = fftb("x{0} y z -> X Y Z{0}", domains=dom, grid=g1)
-    fx(jnp.ones((16, 16, 16), jnp.complex64))
+    # block before stopping the clock — jax dispatch is asynchronous, and
+    # an un-drained call would time only the dispatch (see
+    # repro.obs.trace.timed_call for the canonical pattern)
+    jax.block_until_ready(fx(jnp.ones((16, 16, 16), jnp.complex64)))
     rows.append(("table1_ctoc_cuboid", (time.perf_counter() - t0) * 1e6, 1))
     t0 = time.perf_counter()
     sph = SphereDomain.from_diameter(8)
     inv, fwd = make_planewave_pair(g1, 16, sph, 4)
-    inv(jnp.ones((4, 8, 8, 8), jnp.complex64))
+    jax.block_until_ready(inv(jnp.ones((4, 8, 8, 8), jnp.complex64)))
     rows.append(("table1_sphere_batched", (time.perf_counter() - t0) * 1e6,
                  1))
     for nd in (1, 2, 3):
@@ -249,7 +255,7 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
     commits), True rides the ragged k-stacked batch and the batched
     band-update engine (``scf-stacked``); ``jit_step`` additionally fuses
     each outer iteration into one jit-compiled step (``scf-jit``).
-    Returns the machine-readable schema-3 record merged into
+    Returns the machine-readable schema-4 record merged into
     BENCH_scf.json; ``grid_shape`` is what the trajectory gate keys
     scenarios by, ``band_update`` lets it catch a silent fallback to the
     per-k path, and ``seconds_per_iteration`` tracks per-sweep wall time
@@ -314,7 +320,7 @@ def bench_serve_transform(rows, quick=False):
     on an fft-only grid sized to the device count.  Plans warm on a
     throwaway replay first; the measured window then records sustained
     requests/s, per-request latency percentiles, realized padding and
-    plan-cache behaviour — the numbers the schema-3 gate checks
+    plan-cache behaviour — the numbers the schema-4 gate checks
     (``requests_per_s`` higher-is-better, ``latency_p99_ms``
     lower-is-better, next to the universal ``transforms_per_s``).
     ``converged`` here means the run was healthy: every request resolved,
@@ -422,6 +428,21 @@ def bench_steps(rows):
     rows.append(("decode_step_reduced", us, round(4 / (us * 1e-6), 0)))
 
 
+def _metrics_window(fn):
+    """Run a scenario, embedding the obs-registry delta in its record.
+
+    ``record["metrics"]`` is ``diff_snapshot`` over the window the
+    scenario ran in — counter deltas (fftb executions, cache builds,
+    per-k linalg calls) that let ``compare.py`` attribute a regression
+    to a phase rather than just flag the end-to-end number.
+    """
+    from repro.obs.metrics import diff_snapshot, global_metrics
+    before = global_metrics().snapshot()
+    record = fn()
+    record["metrics"] = diff_snapshot(before, global_metrics().snapshot())
+    return record
+
+
 def atomic_json_dump(record, path: str) -> None:
     """Write JSON via a temp file + atomic rename.
 
@@ -512,7 +533,14 @@ def main(argv=None) -> None:
     ap.add_argument("--scenarios", default="all",
                     help="comma list from %s (default: all)"
                          % ",".join(SCENARIOS))
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(per-stage spans with sync at span exit — "
+                         "perturbs timings, never gate a traced run)")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        from repro.obs.trace import get_tracer
+        get_tracer().enable(sync=True, per_stage=True)
     if args.scenarios == "all":
         wanted = set(SCENARIOS)
     else:
@@ -534,10 +562,11 @@ def main(argv=None) -> None:
     if "fig9" in wanted:
         bench_fig9(rows)
     if "serve-transform" in wanted:
-        scf_records["serve-transform"] = bench_serve_transform(
-            rows, args.quick)
+        scf_records["serve-transform"] = _metrics_window(
+            lambda: bench_serve_transform(rows, args.quick))
     if "scf" in wanted:
-        scf_records["scf"] = bench_scf(rows, args.quick, tag="scf")
+        scf_records["scf"] = _metrics_window(
+            lambda: bench_scf(rows, args.quick, tag="scf"))
     if "scf-2d" in wanted:
         import jax
         shape = scf_2d_grid_shape(jax.device_count())
@@ -550,9 +579,9 @@ def main(argv=None) -> None:
         else:
             # stack_k pinned off: scf-2d tracks the pipelined per-k path,
             # scf-stacked below tracks the ragged k-stacked H apply
-            scf_records["scf-2d"] = bench_scf(
-                rows, args.quick, grid_shape=shape, tag="scf-2d",
-                stack_k=False)
+            scf_records["scf-2d"] = _metrics_window(
+                lambda: bench_scf(rows, args.quick, grid_shape=shape,
+                                  tag="scf-2d", stack_k=False))
     if "scf-stacked" in wanted:
         import jax
         shape = scf_stacked_grid_shape(jax.device_count())
@@ -564,8 +593,9 @@ def main(argv=None) -> None:
                   "count=4)")
         else:
             scf_records["scf-stacked"] = require_stacked_route(
-                bench_scf(rows, args.quick, grid_shape=shape,
-                          tag="scf-stacked", stack_k=True),
+                _metrics_window(
+                    lambda: bench_scf(rows, args.quick, grid_shape=shape,
+                                      tag="scf-stacked", stack_k=True)),
                 "scf-stacked")
     if "scf-jit" in wanted:
         import jax
@@ -578,8 +608,10 @@ def main(argv=None) -> None:
                   "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
         else:
             scf_records["scf-jit"] = require_stacked_route(
-                bench_scf(rows, args.quick, grid_shape=shape,
-                          tag="scf-jit", stack_k=True, jit_step=True),
+                _metrics_window(
+                    lambda: bench_scf(rows, args.quick, grid_shape=shape,
+                                      tag="scf-jit", stack_k=True,
+                                      jit_step=True)),
                 "scf-jit")
     if "steps" in wanted:
         # --quick drops steps from the default "all" sweep, but an
@@ -595,10 +627,17 @@ def main(argv=None) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if scf_records:
-        atomic_json_dump({"schema": 3, "scenarios": scf_records},
+        atomic_json_dump({"schema": 4, "scenarios": scf_records},
                          args.json_out)
         print(f"# wrote {args.json_out} "
               f"(scenarios: {', '.join(scf_records)})")
+    if args.trace_out:
+        from repro.obs.trace import get_tracer
+        tr = get_tracer()
+        tr.disable()
+        tr.export_chrome(args.trace_out)
+        print(f"# wrote {args.trace_out} ({len(tr.events())} trace "
+              "events) — traced timings are not gate-comparable")
 
 
 if __name__ == '__main__':

@@ -7,14 +7,18 @@ plan per sphere served from the process-global PlanCache) interleaved with
 full-cube density/potential transforms for the G-space Hartree solve.
 
 Run:  PYTHONPATH=src python examples/planewave_dft.py \\
-          [--n 16] [--bands 4] [--kpts "0,0,0;0.5,0.5,0.5"] [--grid 2x2]
+          [--n 16] [--bands 4] [--kpts "0,0,0;0.5,0.5,0.5"] [--grid 2x2] \\
+          [--trace-out trace.json]
       (XLA_FLAGS=--xla_force_host_platform_device_count=4 to distribute;
-       --grid auto picks 1D fft vs 2D batch×fft from the problem shape)
+       --grid auto picks 1D fft vs 2D batch×fft from the problem shape;
+       --trace-out writes a Perfetto-loadable span trace — SCF iterations
+       nest transforms nest per-stage FFT/all_to_all spans)
 """
 import argparse
 
 from repro.core import ExecPolicy, ProcGrid, global_plan_cache
 from repro.dft import SCFConfig, run_scf
+from repro.obs.trace import get_tracer
 from repro.sharding.grids import DFT_AXES_1D, DFT_AXES_2D, choose_dft_grid
 
 
@@ -75,7 +79,13 @@ def main(argv=None):
                          "jit-compiled step per outer iteration "
                          "(requires the stacked route; combine with "
                          "--stack-k on to force it on small grids)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(per-stage plan spans, device-synced at span "
+                         "exit — slows the run, timings stay honest)")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        get_tracer().enable(sync=True, per_stage=True)
 
     cfg = SCFConfig(
         n=args.n, diameter=args.diameter, nbands=args.bands,
@@ -117,6 +127,16 @@ def main(argv=None):
     print(f"plan cache: {c['misses']} builds, {c['hits']} hits "
           f"({c['hits'] / max(total, 1):.1%} hit rate) — "
           f"{global_plan_cache()!r}")
+    if args.trace_out:
+        tr = get_tracer()
+        tr.disable()
+        tr.export_chrome(args.trace_out)
+        summ = tr.summary()
+        top = sorted(summ.items(), key=lambda kv: -kv[1]["total_ms"])[:8]
+        print(f"\ntrace: {len(tr.events())} spans -> {args.trace_out} "
+              "(load in https://ui.perfetto.dev)")
+        for name, s in top:
+            print(f"  {name:28s} x{s['count']:<5d} {s['total_ms']:9.2f} ms")
 
 
 if __name__ == "__main__":

@@ -9,9 +9,13 @@ p50/p99 latency, requests/s, realized padding fraction, and the shared
 PlanCache's hit rate over the trace.
 
 Run:  PYTHONPATH=src python examples/serve_transforms.py \\
-          [--requests 32] [--n 16] [--d 8] [--grid 1] [--budget 0.5]
+          [--requests 32] [--n 16] [--d 8] [--grid 1] [--budget 0.5] \\
+          [--trace-out trace.json]
       (XLA_FLAGS=--xla_force_host_platform_device_count=4 with --grid 4
-       to serve distributed transforms; d and n must divide the grid)
+       to serve distributed transforms; d and n must divide the grid;
+       --trace-out writes a Perfetto-loadable span trace — dispatch spans
+       nest transforms nest per-stage FFT/all_to_all, with per-request
+       queue-wait events on the side)
 """
 import argparse
 import json
@@ -19,6 +23,7 @@ import json
 import numpy as np
 
 from repro.core import ProcGrid, global_plan_cache, kpoint_sphere
+from repro.obs.trace import get_tracer
 from repro.serve import TransformService
 
 
@@ -54,8 +59,14 @@ def main(argv=None):
     ap.add_argument("--budget", type=float, default=0.5,
                     help="padding-fraction budget for coalescing")
     ap.add_argument("--max-rows", type=int, default=8)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(per-stage plan spans, device-synced at span "
+                         "exit — slows the run, timings stay honest)")
     args = ap.parse_args(argv)
     d_small = args.d_small if args.d_small is not None else args.d // 2
+    if args.trace_out:
+        get_tracer().enable(sync=True, per_stage=True)
 
     grid = ProcGrid.create([args.grid], ["dft_f"])
     global_plan_cache().clear()
@@ -77,6 +88,12 @@ def main(argv=None):
           f"(budget {args.budget})")
     assert mismatches == 0, f"{mismatches} results differ from eager"
     print("all results bitwise-equal to eager dispatch ✓")
+    if args.trace_out:
+        tr = get_tracer()
+        tr.disable()
+        tr.export_chrome(args.trace_out)
+        print(f"trace: {len(tr.events())} spans -> {args.trace_out} "
+              "(load in https://ui.perfetto.dev)")
     return m
 
 

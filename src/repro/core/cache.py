@@ -26,8 +26,11 @@ replaced under them).
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 
+from ..obs.metrics import global_metrics
+from ..obs.trace import get_tracer
 from .domain import Domain, SphereDomain
 from .grid import ProcGrid
 
@@ -72,6 +75,8 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.builds = 0
+        self.build_seconds = 0.0
 
     def __len__(self) -> int:
         with self._lock:
@@ -108,13 +113,24 @@ class PlanCache:
         discarded (other callers may already hold the winner) and its
         caller is served the cached plan as a hit, not a miss.
         """
+        tr = get_tracer()
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)
                 self.hits += 1
+                tr.instant("plan_cache.hit")
                 return self._data[key][0]
-        plan = builder()
+        tr.instant("plan_cache.miss")
+        t0 = time.perf_counter()
+        with tr.span("plan_build"):
+            plan = builder()
+        build_s = time.perf_counter() - t0
+        global_metrics().histogram("plan_cache.build_ms").record(
+            build_s * 1e3)
+        evicted = 0
         with self._lock:
+            self.builds += 1
+            self.build_seconds += build_s
             won = self._data.get(key)
             if won is not None:                  # lost a build race
                 self._data.move_to_end(key)
@@ -132,6 +148,9 @@ class PlanCache:
                 _, (_, priv, tabs) = self._data.popitem(last=False)
                 self._drop_entry_bytes(priv, tabs)
                 self.evictions += 1
+                evicted += 1
+        for _ in range(evicted):
+            tr.instant("plan_cache.evict")
         return plan
 
     def peek(self, key):
@@ -152,6 +171,8 @@ class PlanCache:
             self._table_refs.clear()
             self._bytes = 0
             self.hits = self.misses = self.evictions = 0
+            self.builds = 0
+            self.build_seconds = 0.0
 
     @property
     def resident_bytes(self) -> int:
@@ -165,6 +186,8 @@ class PlanCache:
             return {"size": len(self._data), "maxsize": self.maxsize,
                     "hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
+                    "builds": self.builds,
+                    "build_seconds": round(self.build_seconds, 6),
                     "resident_bytes": self._bytes,
                     "max_bytes": self.max_bytes}
 
@@ -175,6 +198,11 @@ class PlanCache:
 
 
 _GLOBAL = PlanCache()
+
+# the legacy ad-hoc counters stay API-stable; the registry reads them
+# through a probe so bench snapshots see cache behaviour without the
+# cache changing shape
+global_metrics().register_probe("plan_cache", lambda: _GLOBAL.stats)
 
 
 def global_plan_cache() -> PlanCache:

@@ -30,9 +30,12 @@ from functools import cached_property
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from . import compat
 from . import layout as L
+from ..obs.metrics import global_metrics
+from ..obs.trace import get_tracer
 from .dtensor import DistTensor
 from .local_fft import dft_flops, local_dft
 from .policy import TUNE_CANDIDATES, ExecPolicy
@@ -106,7 +109,18 @@ class Plan:
         pol = self.resolve_policy(policy=policy)
         if pol.check_shapes and tuple(x.shape) != self.tin.shape:
             raise ValueError(f"input shape {x.shape} != {self.tin.shape}")
+        tr = get_tracer()
+        if tr.enabled and not compat.is_tracer(x):
+            # spans only wrap real dispatches: under jit tracing the
+            # wall clock would time trace construction, not execution
+            return self._execute_traced(x, pol, tr)
         return self._execute(x, pol)
+
+    def _execute_traced(self, x, pol: ExecPolicy, tr):
+        """Execution with a span around the dispatch (device-synced)."""
+        with tr.span(f"transform:{type(self).__name__}",
+                     shape=list(self.tin.shape), mode=pol.mode) as sp:
+            return sp.sync(self._execute(x, pol))
 
     def resolve_policy(self, *,
                        policy: ExecPolicy | None = None) -> ExecPolicy:
@@ -135,11 +149,17 @@ class Plan:
                 jax.block_until_ready(self(x, policy=pol))
             t0 = time.perf_counter()
             for _ in range(iters):
+                # block inside the timed region: the clock must stop
+                # only after the device drained, or tune() would rank
+                # candidates by dispatch latency
                 jax.block_until_ready(self(x, policy=pol))
             dt = (time.perf_counter() - t0) / iters
             if best_t is None or dt < best_t:
                 best, best_t = pol, dt
         self.policy = best
+        m = global_metrics()
+        m.counter("fftb.tunes").inc()
+        m.histogram("fftb.tune_best_us").record(best_t * 1e6)
         # memoized mirrors inherited the pre-tune policy — keep the pair
         # in sync, as a freshly derived mirror would be
         for attr in ("_inverse_memo", "_adjoint_memo"):
@@ -535,3 +555,82 @@ class FftPlan(Plan):
     def _execute(self, x, pol: ExecPolicy):
         FftPlan.executions += 1
         return self._fn_for(pol)(x)
+
+    # -------------------------------------------------- traced execution
+    def _pspec_for_layout(self, lay) -> P:
+        """PartitionSpec of this plan's dims under layout ``lay`` —
+        the same rendering ``DistTensor.pspec`` does, for the
+        *intermediate* layouts between stages."""
+        entries = []
+        for d in self.dims:
+            axes = lay.get(d, ())
+            if not axes:
+                entries.append(None)
+            elif len(axes) == 1:
+                entries.append(self.grid.axis_name(axes[0]))
+            else:
+                entries.append(tuple(self.grid.axis_name(a) for a in axes))
+        return P(*entries)
+
+    @cached_property
+    def _stage_executors(self):
+        """One jitted ``shard_map`` per stage, with span metadata.
+
+        The normal executor is ONE ``jit(shard_map(...))`` over the whole
+        stage list — individual stages cannot be timed inside it.  When
+        per-stage tracing is on, execution runs stage-by-stage instead:
+        each stage gets its own small sharded callable whose in/out
+        PartitionSpecs come from replaying the layout moves (exactly as
+        ``_comm_stats_for`` prices them), and MoveStage spans carry the
+        comm model's ``bytes_per_device``/``procs`` tags so traces hold
+        measured *and* modeled comm side by side.
+        """
+        mesh = self.grid.mesh
+        lay = L.normalize(self.tin.layout)
+        grid_shape = self.grid.shape
+        comm = iter(self.comm_stats())
+        out = []
+        for st in self.stages:
+            in_spec = self._pspec_for_layout(lay)
+            if isinstance(st, FFTStage):
+                kind = "idft" if st.inverse else "dft"
+                meta = {"name": f"{kind}[{st.dim}] {st.n_in}->{st.n_out}",
+                        "kind": "fft", "backend": st.backend}
+                out_spec = in_spec
+            else:
+                stats = next(comm)
+                ax = [a for a in range(len(grid_shape))
+                      if self.grid.axis_name(a) == st.axis_name][0]
+                lay = L.apply_move(lay, L.Move(ax, st.src, st.dst))
+                out_spec = self._pspec_for_layout(lay)
+                meta = {"name": f"a2a[{st.axis_name}] {st.src}->{st.dst}",
+                        "kind": "a2a", "procs": stats["procs"],
+                        "model_bytes_per_device":
+                            stats["bytes_per_device"]}
+            fn = jax.jit(compat.shard_map(st.apply, mesh, in_spec,
+                                          out_spec))
+            out.append((fn, meta))
+        return out
+
+    def _execute_traced(self, x, pol: ExecPolicy, tr):
+        FftPlan.executions += 1
+        name = ("ifft" if self.is_inverse else "fft") \
+            + f"{len(self.fft_pairs)}d"
+        with tr.span(f"plan:{name}", shape=list(self.tin.shape),
+                     mode=pol.mode, stages=len(self.stages)) as sp:
+            if not tr.per_stage:
+                return sp.sync(self._fn_for(pol)(x))
+            # stage-by-stage: eager per-stage apply (the lazy executor
+            # interleaves stages and cannot be split), one span each
+            for fn, meta in self._stage_executors:
+                attrs = {k: v for k, v in meta.items() if k != "name"}
+                with tr.span(meta["name"], **attrs) as ssp:
+                    x = ssp.sync(fn(x))
+            if self.scale != 1.0:
+                x = x * jnp.asarray(self.scale, x.dtype)
+            return sp.sync(x)
+
+
+global_metrics().register_probe(
+    "fftb", lambda: {"executions": FftPlan.executions,
+                     "searches": FftPlan.searches})

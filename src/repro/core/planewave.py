@@ -68,6 +68,13 @@ class PlaneWaveFFT(Plan):
     def _execute(self, x, pol: ExecPolicy):
         return self.plan._execute(x, pol)
 
+    def _execute_traced(self, x, pol: ExecPolicy, tr):
+        # wrap the inner plan's (possibly per-stage) spans in one
+        # transform-level span tagged with the sphere shape
+        with tr.span("planewave", inverse=self.is_inverse,
+                     d=self.sphere.extents[0], n=self.n[0]) as sp:
+            return sp.sync(self.plan._execute_traced(x, pol, tr))
+
     @property
     def stages(self):
         return self.plan.stages
@@ -369,6 +376,12 @@ class StackedPlaneWaveFFT(Plan):
     # ------------------------------------------------------------- execute
     def _execute(self, x, pol: ExecPolicy):
         return self.plan._execute(x, pol)
+
+    def _execute_traced(self, x, pol: ExecPolicy, tr):
+        with tr.span("stacked_planewave", inverse=self.is_inverse,
+                     nk=self.nk, npacked_max=self.npacked_max,
+                     padding=round(self.padding_fraction, 4)) as sp:
+            return sp.sync(self.plan._execute_traced(x, pol, tr))
 
     @property
     def stages(self):

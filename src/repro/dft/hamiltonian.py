@@ -43,10 +43,16 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.obs.metrics import global_metrics
+from repro.obs.trace import get_tracer
+
 #: process-wide count of per-k eager linalg calls (descent-direction
 #: builds and Rayleigh-Ritz solves dispatched for a single k-point) —
 #: lets tests assert the stacked engine performs zero of them.
 PERK_LINALG_CALLS = 0
+
+global_metrics().register_probe(
+    "dft", lambda: {"per_k_linalg_calls": PERK_LINALG_CALLS})
 
 
 def _replicated(basis, x):
@@ -366,12 +372,16 @@ def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3,
     nk = len(coeffs)
     if stacked is None:
         stacked = bool(getattr(basis, "stacks_k", False))
+    tr = get_tracer()
     if stacked:
-        inv, _ = basis.stacked_hamiltonian_plans()
-        c_pad = inv.stack(coeffs).reshape(nk, inv.nbands, inv.npacked_max)
-        c_pad, eps, nsweep = update_bands_stacked(basis, c_pad, v_eff,
-                                                  steps=steps)
-        cs = inv.split(c_pad.reshape(nk * inv.nbands, inv.npacked_max))
+        with tr.span("band_update", route="stacked", nk=nk, steps=steps):
+            inv, _ = basis.stacked_hamiltonian_plans()
+            c_pad = inv.stack(coeffs).reshape(nk, inv.nbands,
+                                              inv.npacked_max)
+            c_pad, eps, nsweep = update_bands_stacked(basis, c_pad, v_eff,
+                                                      steps=steps)
+            cs = inv.split(c_pad.reshape(nk * inv.nbands,
+                                         inv.npacked_max))
         return cs, [eps[ik] for ik in range(nk)], nsweep
     npm = basis.npacked_max
     cs = [_replicated(basis, c) for c in coeffs]

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.core import ProcGrid, global_plan_cache
 from repro.core.policy import ExecPolicy
+from repro.obs.trace import get_tracer
 
 from .basis import PlaneWaveBasis
 from .density import (density_from_orbitals, density_from_stacked,
@@ -222,6 +223,11 @@ class SCFResult:
     band_update: str = "per-k"        # band-update route: "stacked" (the
                                       # batched engine) or "per-k"
     jitted: bool = False              # iterations ran as the fused jit step
+    #: per-iteration telemetry: one dict per outer iteration with
+    #: {iteration, energy, residual, seconds, transforms} — the record
+    #: the observability layer attaches so a slow run can be broken
+    #: down without re-running under a profiler
+    iteration_records: list = dataclasses.field(default_factory=list)
 
     @property
     def transforms_per_s(self) -> float:
@@ -332,6 +338,7 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
 
     energies: list[float] = []
     residuals: list[float] = []
+    records: list[dict] = []
     eigs = np.zeros((basis.nk, basis.nbands))
     transforms = 0
     converged = False
@@ -340,15 +347,24 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
     # Hartree pair + band-update sweeps + density + the energy's Hartree
     per_iter = (2 + 2 * cfg.inner_steps * basis.nk * 2 * basis.nbands
                 + basis.nk * basis.nbands + 2)
+    tr = get_tracer()
     t0 = time.perf_counter()
     for it in range(cfg.max_iter):
-        rho, c_pad, mix_state, rho_out, eps, energy, resid = \
-            step(rho, c_pad, mix_state)
+        it_t0 = time.perf_counter()
+        with tr.span("scf_iteration", iteration=it, route="jit"):
+            rho, c_pad, mix_state, rho_out, eps, energy, resid = \
+                step(rho, c_pad, mix_state)
+            # the float() conversions sync on the step's outputs, so
+            # the span and the per-iteration seconds cover real work
+            energy = float(energy)
+            resid = float(resid)
         transforms += per_iter
-        energy = float(energy)
-        resid = float(resid)
         energies.append(energy)
         residuals.append(resid)
+        records.append({"iteration": it, "energy": energy,
+                        "residual": resid,
+                        "seconds": time.perf_counter() - it_t0,
+                        "transforms": per_iter})
         eigs = np.asarray(eps)
         if callback is not None:
             callback(it, energy, resid)
@@ -357,9 +373,13 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
                 and resid < cfg.r_tol):
             converged = True
             break
+    # drain the donated buffers before stopping the clock: the scalar
+    # syncs above cover the energy/residual path but not necessarily the
+    # mixed density still in flight
+    jax.block_until_ready((rho, rho_out))
     seconds = time.perf_counter() - t0
-    return energies, residuals, eigs, rho_out, transforms, converged, \
-        seconds
+    return energies, residuals, records, eigs, rho_out, transforms, \
+        converged, seconds
 
 
 def _init_coefficients(basis, seed: int):
@@ -420,9 +440,9 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
     coeffs = _init_coefficients(basis, cfg.seed)
 
     if cfg.jit_step:
-        energies, residuals, eigs, rho, transforms, converged, seconds = \
-            _jit_scf_loop(cfg, basis, v_ext, hartree, occ, nelec, coeffs,
-                          callback)
+        (energies, residuals, iteration_records, eigs, rho, transforms,
+         converged, seconds) = _jit_scf_loop(cfg, basis, v_ext, hartree,
+                                             occ, nelec, coeffs, callback)
     else:
         rho = density_from_orbitals(basis, coeffs, occ)
         mixer = AndersonMixer(cfg.mix_alpha, cfg.mix_history,
@@ -431,48 +451,60 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
 
         energies = []
         residuals = []
+        iteration_records = []
         eigs = np.zeros((basis.nk, basis.nbands))
         # counter and timer both cover the SCF loop only: the warm-up
         # density build above (plan construction + first traces) is
         # excluded from both
         transforms = 0
         converged = False
+        tr = get_tracer()
         t0 = time.perf_counter()
 
         for it in range(cfg.max_iter):
-            vh = hartree(rho)
-            transforms += 2                        # cube fwd + derived inv
-            v_eff = v_ext + vh
-            if cfg.xc:
-                _, v_x = lda_exchange(rho)
-                v_eff = v_eff + v_x
-            if cfg.pipeline:
-                # all-k loop: the batched stacked engine (one ragged
-                # nk·nbands stack, einsum Gram/Rayleigh-Ritz) when the
-                # basis stacks k-points, pipelined per-k dispatch
-                # otherwise — per-k math identical to the serial branch
-                coeffs, eps_list, nsweep = update_bands_all_k(
-                    basis, coeffs, v_eff, steps=cfg.inner_steps,
-                    stacked=stack_k)
-                for ik in range(basis.nk):
-                    eigs[ik] = np.asarray(eps_list[ik])
-                transforms += nsweep * basis.nk * 2 * basis.nbands
-            else:
-                for ik in range(basis.nk):
-                    coeffs[ik], eps, napply = update_bands(
-                        basis, ik, coeffs[ik], v_eff,
-                        steps=cfg.inner_steps)
-                    eigs[ik] = np.asarray(eps)
-                    transforms += napply * 2 * basis.nbands
-            rho_out = density_from_orbitals(basis, coeffs, occ)
-            transforms += basis.nk * basis.nbands
-            energy, _ = total_energy(basis, coeffs, rho_out, v_ext,
-                                     hartree, occ, xc=cfg.xc)
-            transforms += 2                        # energy's Hartree solve
-            resid = float(jnp.linalg.norm(rho_out - rho)
-                          * basis.dv ** 0.5) / max(nelec, 1e-9)
+            it_t0 = time.perf_counter()
+            it_transforms0 = transforms
+            with tr.span("scf_iteration", iteration=it,
+                         route="stacked" if stacked else "per-k"):
+                vh = hartree(rho)
+                transforms += 2                    # cube fwd + derived inv
+                v_eff = v_ext + vh
+                if cfg.xc:
+                    _, v_x = lda_exchange(rho)
+                    v_eff = v_eff + v_x
+                if cfg.pipeline:
+                    # all-k loop: the batched stacked engine (one ragged
+                    # nk·nbands stack, einsum Gram/Rayleigh-Ritz) when
+                    # the basis stacks k-points, pipelined per-k dispatch
+                    # otherwise — per-k math identical to the serial
+                    # branch
+                    coeffs, eps_list, nsweep = update_bands_all_k(
+                        basis, coeffs, v_eff, steps=cfg.inner_steps,
+                        stacked=stack_k)
+                    for ik in range(basis.nk):
+                        eigs[ik] = np.asarray(eps_list[ik])
+                    transforms += nsweep * basis.nk * 2 * basis.nbands
+                else:
+                    for ik in range(basis.nk):
+                        coeffs[ik], eps, napply = update_bands(
+                            basis, ik, coeffs[ik], v_eff,
+                            steps=cfg.inner_steps)
+                        eigs[ik] = np.asarray(eps)
+                        transforms += napply * 2 * basis.nbands
+                rho_out = density_from_orbitals(basis, coeffs, occ)
+                transforms += basis.nk * basis.nbands
+                energy, _ = total_energy(basis, coeffs, rho_out, v_ext,
+                                         hartree, occ, xc=cfg.xc)
+                transforms += 2                    # energy's Hartree solve
+                # float() syncs on rho_out, closing the span honestly
+                resid = float(jnp.linalg.norm(rho_out - rho)
+                              * basis.dv ** 0.5) / max(nelec, 1e-9)
             energies.append(energy)
             residuals.append(resid)
+            iteration_records.append({
+                "iteration": it, "energy": energy, "residual": resid,
+                "seconds": time.perf_counter() - it_t0,
+                "transforms": transforms - it_transforms0})
             if callback is not None:
                 callback(it, energy, resid)
             if (it > cfg.mix_warmup
@@ -482,6 +514,7 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
                 break
             rho = mixer.mix(rho, rho_out)
 
+        jax.block_until_ready(rho)   # drain the last mix before the clock
         seconds = time.perf_counter() - t0
         # return the density the orbitals actually produced (not the mixed
         # guess) — coeffs are unchanged since the loop's last rho_out
@@ -503,4 +536,5 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         grid_shape=tuple(basis.grid.shape), stacked=stacked,
         padding_fraction=padding,
         band_update="stacked" if stacked else "per-k",
-        jitted=bool(cfg.jit_step))
+        jitted=bool(cfg.jit_step),
+        iteration_records=iteration_records)

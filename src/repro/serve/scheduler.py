@@ -115,6 +115,7 @@ class TransformHandle:
     def __init__(self, request: TransformRequest):
         self.request = request
         self.submitted_at = time.perf_counter()
+        self.dispatched_at: float | None = None
         self.completed_at: float | None = None
         self._event = threading.Event()
         self._result = None
@@ -137,6 +138,13 @@ class TransformHandle:
         if self.completed_at is None:
             return None
         return self.completed_at - self.submitted_at
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Submit→dispatch wall seconds (None until dispatch starts)."""
+        if self.dispatched_at is None:
+            return None
+        return self.dispatched_at - self.submitted_at
 
     # ------------------------------------------------- service-side setters
     def _resolve(self, value) -> None:

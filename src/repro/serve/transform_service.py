@@ -53,6 +53,8 @@ from repro.core import Domain, fftb, global_plan_cache, \
 from repro.core.cache import domains_key, grid_key
 from repro.core.domain import SphereDomain
 from repro.core.policy import ExecPolicy
+from repro.obs.metrics import global_metrics, register_weak_probe
+from repro.obs.trace import get_tracer
 
 from .metrics import ServiceMetrics
 from .scheduler import (CoalescingScheduler, DeadlineExceeded, QueueFull,
@@ -109,6 +111,9 @@ class TransformService:
             max_rows=max_rows if self.coalesce else 1,
             max_queue_per_tenant=max_queue_per_tenant)
         self.metrics = ServiceMetrics(self.cache)
+        # bench snapshots read the live summary through a weak probe —
+        # the registry never keeps a dead service alive
+        register_weak_probe(global_metrics(), "serve", self.metrics)
         self._warmed: set = set()
         self._inflight: set = set()
         self._warm_lock = threading.Lock()
@@ -234,13 +239,20 @@ class TransformService:
         Returns the number of requests *resolved* this step (results or
         deadline errors); 0 means idle or stalled on a warming plan.
         """
+        tr = get_tracer()
         resolved = 0
         for h in self.scheduler.expire():
             self.metrics.record_error("deadline")
             resolved += 1
+        t0 = time.perf_counter()
         batch = self.scheduler.next_batch()
         if not batch:
             return resolved
+        # only non-empty batches get a coalesce event — idle polls would
+        # flood the trace with zero-length noise
+        tr.event("serve.coalesce", t0, time.perf_counter(),
+                 requests=len(batch),
+                 rows=sum(h.request.nbands for h in batch))
         if not self._ensure_warm(batch):
             self.scheduler.requeue_front(batch)
             return resolved
@@ -254,39 +266,51 @@ class TransformService:
         return resolved + len(batch)
 
     def _dispatch(self, batch) -> None:
+        tr = get_tracer()
+        now = time.perf_counter()
+        for h in batch:
+            h.dispatched_at = now
         reqs = [h.request for h in batch]
         rows = sum(r.nbands for r in reqs)
         bucket = self.bucket_for(rows)
-        spheres: list = []
-        for r in reqs:
-            spheres.extend([r.sphere] * r.nbands)
-        spheres.extend([spheres[0]] * (bucket - rows))   # inert zero rows
-        inv, fwd = self._pair_for(tuple(spheres), bucket)
+        padding = CoalescingScheduler.batch_padding(batch)
+        with tr.span("serve.dispatch", requests=len(reqs), rows=rows,
+                     bucket=bucket, padding=round(padding, 4)):
+            spheres: list = []
+            for r in reqs:
+                spheres.extend([r.sphere] * r.nbands)
+            spheres.extend([spheres[0]] * (bucket - rows))  # inert rows
+            inv, fwd = self._pair_for(tuple(spheres), bucket)
 
-        buf = np.zeros((bucket, inv.npacked_max), np.complex64)
-        r0 = 0
-        for r in reqs:
-            buf[r0:r0 + r.nbands, :r.sphere.npacked] = r.coeffs
-            r0 += r.nbands
-        psi = inv(inv.unpack(jnp.asarray(buf)))
-        if any(r.v_eff is not None for r in reqs):
-            v = np.ones((bucket,) + (self.n,) * 3, np.float32)
+            buf = np.zeros((bucket, inv.npacked_max), np.complex64)
             r0 = 0
             for r in reqs:
-                if r.v_eff is not None:
-                    v[r0:r0 + r.nbands] = r.v_eff
+                buf[r0:r0 + r.nbands, :r.sphere.npacked] = r.coeffs
                 r0 += r.nbands
-            psi = psi * jnp.asarray(v)
-        out = np.asarray(inv.pack(fwd(psi)))
+            psi = inv(inv.unpack(jnp.asarray(buf)))
+            if any(r.v_eff is not None for r in reqs):
+                v = np.ones((bucket,) + (self.n,) * 3, np.float32)
+                r0 = 0
+                for r in reqs:
+                    if r.v_eff is not None:
+                        v[r0:r0 + r.nbands] = r.v_eff
+                    r0 += r.nbands
+                psi = psi * jnp.asarray(v)
+            # np.asarray materializes the result — the span end is an
+            # honest completion time without an extra sync
+            out = np.asarray(inv.pack(fwd(psi)))
 
-        self.metrics.record_dispatch(
-            len(reqs), rows, CoalescingScheduler.batch_padding(batch))
+        self.metrics.record_dispatch(len(reqs), rows, padding)
         r0 = 0
         for h, r in zip(batch, reqs):
             h._resolve(out[r0:r0 + r.nbands, :r.sphere.npacked].copy())
             r0 += r.nbands
             self.metrics.record_request(
-                r.tenant, h.latency, r.nbands)
+                r.tenant, h.latency, r.nbands,
+                queue_wait_s=h.queue_wait)
+            tr.event("serve.request", h.submitted_at, h.completed_at,
+                     tenant=r.tenant, rid=r.rid, nbands=r.nbands,
+                     queue_wait_ms=round(h.queue_wait * 1e3, 3))
 
     # ------------------------------------------------------- eager oracle
     def eager_apply(self, coeffs, sphere: SphereDomain, v_eff=None
