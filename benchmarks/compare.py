@@ -19,7 +19,11 @@ neither and are unaffected.  Scenario configs (devices, quick flag, grid shape) 
 checked too, as are the *route* fields ``pipeline``/``stacked``/
 ``band_update``: a scenario that silently fell back from the stacked
 band-update engine to the per-k path is a different configuration, not a
-perf data point — the gate catches exactly that fallback.  Comparing
+perf data point — the gate catches exactly that fallback.  Schema-5
+records additionally carry ``segments`` (the segmented ragged-stacking
+count); it gates as a config key when the baseline knows it, so a
+changed segmentation reads as a config mismatch, while schema-4
+baselines compare exactly as before.  Comparing
 numbers measured under different configurations is an error, not a pass.
 The other direction is *not* an error: a scenario present in the current
 run but absent from the baseline (a freshly added benchmark, e.g.
@@ -61,6 +65,14 @@ import sys
 CONFIG_KEYS = ("grid_shape", "scenario", "pipeline", "stacked",
                "band_update")
 
+#: config keys gated only when the baseline record carries them — the
+#: schema-4 → 5 bridge.  ``segments`` (how many ragged stacks the
+#: k-points split into under the scenario's padding budget) is part of
+#: the measured configuration: a run whose segmentation changed executes
+#: different batched transforms and is not comparable.  Schema-4
+#: baselines predate the field and gate without it until refreshed.
+OPTIONAL_CONFIG_KEYS = ("segments",)
+
 #: serving metrics gated *when the baseline record carries them* (the
 #: serve-transform scenario does; SCF scenarios don't and are unaffected).
 #: ``transforms_per_s`` stays universal and required.  Each entry is
@@ -74,17 +86,20 @@ SERVE_METRICS = (
 
 
 def load_scenarios(path: str) -> dict:
-    """Scenario dict of a BENCH_scf.json — schemas 2 through 4.
+    """Scenario dict of a BENCH_scf.json — schemas 2 through 5.
 
     Schema 4 adds a per-scenario ``metrics`` delta (obs-registry window);
-    schema-3 baselines stay loadable through the transition — comparisons
-    read specific keys, and ``metrics`` is attribution, never gated.
+    schema 5 adds ``segments``/``segment_padding_fractions`` (segmented
+    ragged stacking) and ``grid_rank``.  Older baselines stay loadable
+    through each transition — comparisons read specific keys, ``metrics``
+    is attribution (never gated), and ``segments`` gates only when the
+    baseline carries it (see OPTIONAL_CONFIG_KEYS).
     """
     with open(path) as f:
         record = json.load(f)
     if not isinstance(record, dict) or "scenarios" not in record:
         raise SystemExit(
-            f"{path}: not a schema-2/3/4 BENCH_scf.json (missing "
+            f"{path}: not a schema-2/3/4/5 BENCH_scf.json (missing "
             "'scenarios'); regenerate with benchmarks/run.py")
     return record["scenarios"]
 
@@ -151,6 +166,15 @@ def compare_records(current: dict, baseline: dict,
                     f"{name}: {key} changed ({base.get(key)} -> "
                     f"{cur.get(key)}); refresh the baseline instead of "
                     "comparing different configurations")
+        # optional config keys gate only when the baseline knows them —
+        # a schema-4 baseline without ``segments`` compares as before
+        for key in OPTIONAL_CONFIG_KEYS:
+            if key in base and cur.get(key) != base.get(key):
+                failures.append(
+                    f"{name}: {key} changed ({base.get(key)} -> "
+                    f"{cur.get(key)}); a different segmentation executes "
+                    "different batched transforms — refresh the baseline "
+                    "instead of comparing different configurations")
         if not cur.get("converged", False):
             failures.append(f"{name}: SCF did not converge")
         base_tps = base.get("transforms_per_s")
@@ -219,6 +243,9 @@ def drifted_scenarios(current: dict, baseline: dict,
         if cur is None:
             continue
         if any(cur.get(k) != base.get(k) for k in CONFIG_KEYS):
+            continue
+        if any(k in base and cur.get(k) != base.get(k)
+               for k in OPTIONAL_CONFIG_KEYS):
             continue
         base_tps = base.get("transforms_per_s")
         cur_tps = cur.get("transforms_per_s")

@@ -13,22 +13,36 @@ Prints ``name,us_per_call,derived`` CSV rows:
 The SCF scenarios (``scf`` on a 1D fft grid, ``scf-2d`` pipelined on a
 batch×fft 2D grid, ``scf-stacked`` with the batched stacked band-update
 engine on the same 2D grid, ``scf-jit`` adding the fused jit-compiled SCF
-step — each recording its grid shape, padding fraction, band-update route
-and per-iteration wall time) additionally write machine-readable
-schema-4 ``BENCH_scf.json`` (transforms/s, iterations to convergence,
-plan-cache hit rate, plus a per-scenario ``metrics`` delta from the
-``repro.obs`` registry so regressions attribute to a phase) so the perf
-trajectory can be tracked across commits; CI's bench-trajectory job
-uploads it and gates regressions against ``benchmarks/baseline.json``
-via ``benchmarks/compare.py`` (schema-3 baselines still load).  The
+step, ``scf-3d`` on a batch×fft×fft *pencil* grid with segmented ragged
+stacking — each recording its grid shape, padding fraction, segment
+count, band-update route and per-iteration wall time) additionally write
+machine-readable schema-5 ``BENCH_scf.json`` (transforms/s, iterations
+to convergence, plan-cache hit rate, per-segment realized padding, plus
+a per-scenario ``metrics`` delta from the ``repro.obs`` registry so
+regressions attribute to a phase) so the perf trajectory can be tracked
+across commits; CI's bench-trajectory job uploads it and gates
+regressions against ``benchmarks/baseline.json`` via
+``benchmarks/compare.py`` (schema-3/4 baselines still load).  The
 ``band_update`` field rides the record so the gate catches a silent
-fallback from the stacked engine to the per-k path; the stacked/jit
+fallback from the stacked engine to the per-k path; the stacked/jit/3d
 scenarios additionally hard-fail here if the route they exist to measure
 did not engage.  The JSON is written atomically (temp file + rename) so
 an interrupted run can't leave a truncated artifact.
 
+``--scenarios gate`` resolves the scenario list from the committed
+baseline (``--baseline``), so the CI gate jobs and the baseline-drift
+automation share one source of truth for what is gated — adding a
+scenario to the baseline is what starts gating it, with no workflow
+edits.  ``--merge`` folds this run's records into an existing
+``--json-out`` instead of replacing it: CI's bench-trajectory job runs
+the 4-device scenarios first, then merges the 8-device ``scf-3d`` record
+into the same BENCH_scf.json before a single gate invocation (the gate
+fails on baseline scenarios missing from the current run, so the merged
+artifact is what gets compared).
+
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
-         [--scenarios scf,scf-2d,scf-stacked,scf-jit] [--trace-out PATH]
+         [--scenarios scf,scf-2d,scf-stacked,scf-jit,scf-3d | gate]
+         [--merge] [--baseline PATH] [--trace-out PATH]
 """
 from __future__ import annotations
 
@@ -40,10 +54,11 @@ import time
 
 import numpy as np
 
-#: selectable benchmark scenarios (--scenarios comma list, default all)
+#: selectable benchmark scenarios (--scenarios comma list, default all;
+#: the literal ``gate`` resolves to whatever the baseline gates)
 SCENARIOS = ("table1", "plan_cache", "local_fft", "planewave", "fig9",
              "serve-transform",
-             "scf", "scf-2d", "scf-stacked", "scf-jit", "steps")
+             "scf", "scf-2d", "scf-stacked", "scf-jit", "scf-3d", "steps")
 
 
 def _timeit(fn, *args, warmup=2, iters=5):
@@ -244,36 +259,42 @@ def bench_fig9(rows):
 
 
 def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
-              stack_k=None, jit_step=False):
+              stack_k=None, jit_step=False, segment_padding=None):
     """repro.dft SCF scenario — the paper's end-to-end workload.
 
     Two k-points (two distinct sphere plans) + the full-cube Hartree pair,
-    mixing-driven SCF, on a 1D fft-only grid (``tag='scf'``) or a 2D
+    mixing-driven SCF, on a 1D fft-only grid (``tag='scf'``), a 2D
     batch×fft grid (``tag='scf-2d'``, grid_shape e.g. (2, 2) — bands shard
-    the batch axis).  ``stack_k`` pins the H-sweep route: False keeps the
-    pipelined per-k dispatch (so ``scf-2d`` stays comparable across
-    commits), True rides the ragged k-stacked batch and the batched
-    band-update engine (``scf-stacked``); ``jit_step`` additionally fuses
-    each outer iteration into one jit-compiled step (``scf-jit``).
-    Returns the machine-readable schema-4 record merged into
-    BENCH_scf.json; ``grid_shape`` is what the trajectory gate keys
-    scenarios by, ``band_update`` lets it catch a silent fallback to the
-    per-k path, and ``seconds_per_iteration`` tracks per-sweep wall time
-    next to ``transforms_per_s``.
+    the batch axis), or a 3D batch×fft×fft pencil grid (``tag='scf-3d'``,
+    grid_shape e.g. (2, 2, 2) — two decomposed fft axes).  ``stack_k``
+    pins the H-sweep route: False keeps the pipelined per-k dispatch (so
+    ``scf-2d`` stays comparable across commits), True rides the ragged
+    k-stacked batch and the batched band-update engine (``scf-stacked``);
+    ``jit_step`` additionally fuses each outer iteration into one
+    jit-compiled step (``scf-jit``); ``segment_padding`` caps per-segment
+    realized padding so the stacked batch splits into segments instead of
+    padding every k to the global max (``scf-3d``).  Returns the
+    machine-readable schema-5 record merged into BENCH_scf.json;
+    ``grid_shape`` is what the trajectory gate keys scenarios by,
+    ``band_update``/``segments`` let it catch a silent fallback to the
+    per-k path or a changed segmentation, and ``seconds_per_iteration``
+    tracks per-sweep wall time next to ``transforms_per_s``.
     """
     import jax
     from repro.core import ProcGrid, global_plan_cache
     from repro.dft import SCFConfig, run_scf
+    from repro.sharding.grids import DFT_AXES_1D, DFT_AXES_2D, DFT_AXES_3D
     if grid_shape is None:
         grid_shape = (jax.device_count(),)
     grid_shape = tuple(grid_shape)
-    names = ("dft_b", "dft_f")[-len(grid_shape):]
+    names = {1: DFT_AXES_1D, 2: DFT_AXES_2D, 3: DFT_AXES_3D}[len(grid_shape)]
     grid = ProcGrid.create(list(grid_shape), list(names))
     cfg = SCFConfig(n=16, nbands=4, kpts=((0, 0, 0), (0.5, 0.5, 0.5)),
                     max_iter=20 if quick else 50,
                     e_tol=1e-4 if quick else 1e-5,
                     r_tol=1e-3 if quick else 1e-4,
-                    stack_k=stack_k, jit_step=jit_step)
+                    stack_k=stack_k, jit_step=jit_step,
+                    segment_padding=segment_padding)
     global_plan_cache().clear()
     res = run_scf(cfg, grid=grid)
     c = res.cache_stats
@@ -292,13 +313,18 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
             "max_iter": cfg.max_iter, "e_tol": cfg.e_tol,
             "devices": jax.device_count(), "quick": bool(quick),
             "jit_step": bool(cfg.jit_step),
+            "segment_padding": segment_padding,
         },
         "grid_shape": list(grid_shape),
+        "grid_rank": len(grid_shape),
         "pipeline": bool(cfg.pipeline),
         "stacked": bool(res.stacked),
         "band_update": res.band_update,
         "jitted": bool(res.jitted),
         "padding_fraction": round(res.padding_fraction, 4),
+        "segments": res.segments,
+        "segment_padding_fractions": [
+            round(f, 4) for f in res.segment_padding_fractions],
         "converged": bool(res.converged),
         "scf_iterations": res.iterations,
         "total_energy": res.energy,
@@ -507,6 +533,31 @@ def scf_stacked_grid_shape(ndevices: int) -> tuple[int, int] | None:
     return shape
 
 
+#: scf-3d's per-segment padding budget.  The scenario's two d=8 spheres
+#: pack 280 and 254 coefficients — stacking both in one segment realizes
+#: ~4.6% padding, so a 2% budget deterministically splits them into two
+#: per-k segments (each realizing 0%), exercising the segmented route
+#: end to end.  With the pencil grid's batch factor pb=2, singleton
+#: segments still stack (pb % 1 == 0 and 1·nbands % pb == 0).
+SCF_SEGMENT_PADDING = 0.02
+
+
+def scf_3d_grid_shape(ndevices: int) -> tuple[int, int, int] | None:
+    """(batch, fft, fft) pencil split for scf-3d, None when infeasible.
+
+    Same chooser as the other grid pickers; the pencil tier engages from
+    8 devices for the scenario shape (nbands=4, d=8 → (2, 2, 2)).  None
+    when the chooser stays 1D/2D — fewer than 8 devices, or no per-axis
+    fft split within the chooser's max-fft-fraction guard.
+    """
+    from repro.sharding.grids import choose_dft_grid_shape
+    if ndevices < 8:
+        return None
+    shape = choose_dft_grid_shape(ndevices, nbands=SCF_NBANDS,
+                                  diameter=SCF_DIAMETER, nk=SCF_NK)
+    return shape if len(shape) == 3 else None
+
+
 def require_stacked_route(record: dict, tag: str) -> dict:
     """Hard-fail when a stacked-route scenario fell back to per-k.
 
@@ -525,14 +576,48 @@ def require_stacked_route(record: dict, tag: str) -> dict:
     return record
 
 
+def write_scenario_records(scf_records: dict, json_out: str,
+                           merge: bool = False) -> dict:
+    """Atomically write the schema-5 artifact; with ``merge``, fold the
+    new records into whatever ``json_out`` already holds.
+
+    The merge path is how CI's 8-device scf-3d step joins the 4-device
+    scenarios in one BENCH_scf.json: the gate fails on baseline
+    scenarios missing from the artifact it is handed, so both runs must
+    land in the same file before the single compare invocation.  Same
+    scenario name twice → the later run wins (a deliberate re-measure).
+    Returns the merged scenario dict that was written.
+    """
+    merged = dict(scf_records)
+    if merge and os.path.exists(json_out):
+        with open(json_out) as f:
+            prev = json.load(f)
+        merged = dict(prev.get("scenarios", {}))
+        merged.update(scf_records)
+    atomic_json_dump({"schema": 5, "scenarios": merged}, json_out)
+    return merged
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json-out", default="BENCH_scf.json",
                     help="path for the machine-readable SCF record")
+    ap.add_argument("--merge", action="store_true",
+                    help="fold this run's scenario records into an "
+                         "existing --json-out instead of replacing it "
+                         "(CI's 8-device scf-3d step merges into the "
+                         "4-device artifact before the single gate call)")
     ap.add_argument("--scenarios", default="all",
-                    help="comma list from %s (default: all)"
+                    help="comma list from %s, or the literal 'gate' to "
+                         "run exactly the scenarios the baseline gates"
                          % ",".join(SCENARIOS))
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baseline.json"),
+                    help="baseline JSON that '--scenarios gate' resolves "
+                         "the scenario list from (default: the committed "
+                         "benchmarks/baseline.json)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
                          "(per-stage spans with sync at span exit — "
@@ -543,6 +628,26 @@ def main(argv=None) -> None:
         get_tracer().enable(sync=True, per_stage=True)
     if args.scenarios == "all":
         wanted = set(SCENARIOS)
+    elif args.scenarios == "gate":
+        # single source of truth for the gated scenario list: whatever
+        # the committed baseline knows is what CI runs — adding a
+        # scenario to the baseline starts gating it, no workflow edits
+        try:
+            with open(args.baseline) as f:
+                base = json.load(f)["scenarios"]
+        except (OSError, KeyError, json.JSONDecodeError) as e:
+            ap.error(f"--scenarios gate: cannot resolve scenario list "
+                     f"from {args.baseline}: {e}")
+        wanted = set(base) & set(SCENARIOS)
+        stale = sorted(set(base) - set(SCENARIOS))
+        if stale:
+            print(f"# WARNING: baseline gates unknown scenario(s) "
+                  f"{stale} — this harness cannot run them")
+        if not wanted:
+            ap.error(f"--scenarios gate: {args.baseline} gates no "
+                     "scenario this harness knows")
+        print(f"# gate scenarios from {args.baseline}: "
+              f"{', '.join(sorted(wanted))}")
     else:
         wanted = {s.strip() for s in args.scenarios.split(",") if s.strip()}
         bad = wanted - set(SCENARIOS)
@@ -613,6 +718,23 @@ def main(argv=None) -> None:
                                       tag="scf-jit", stack_k=True,
                                       jit_step=True)),
                 "scf-jit")
+    if "scf-3d" in wanted:
+        import jax
+        shape = scf_3d_grid_shape(jax.device_count())
+        if shape is None:
+            print(f"# scf-3d skipped: no batch×fft×fft pencil split for "
+                  f"{jax.device_count()} device(s) — needs >= 8 with the "
+                  f"batch factor dividing nbands={SCF_NBANDS} and each "
+                  f"fft factor within the d={SCF_DIAMETER} sphere's "
+                  "per-axis guard (XLA_FLAGS=--xla_force_host_platform_"
+                  "device_count=8)")
+        else:
+            scf_records["scf-3d"] = require_stacked_route(
+                _metrics_window(
+                    lambda: bench_scf(rows, args.quick, grid_shape=shape,
+                                      tag="scf-3d", stack_k=True,
+                                      segment_padding=SCF_SEGMENT_PADDING)),
+                "scf-3d")
     if "steps" in wanted:
         # --quick drops steps from the default "all" sweep, but an
         # explicitly requested scenario always runs
@@ -627,10 +749,10 @@ def main(argv=None) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if scf_records:
-        atomic_json_dump({"schema": 4, "scenarios": scf_records},
-                         args.json_out)
+        merged = write_scenario_records(scf_records, args.json_out,
+                                        merge=args.merge)
         print(f"# wrote {args.json_out} "
-              f"(scenarios: {', '.join(scf_records)})")
+              f"(scenarios: {', '.join(merged)})")
     if args.trace_out:
         from repro.obs.trace import get_tracer
         tr = get_tracer()

@@ -19,7 +19,8 @@ import argparse
 from repro.core import ExecPolicy, ProcGrid, global_plan_cache
 from repro.dft import SCFConfig, run_scf
 from repro.obs.trace import get_tracer
-from repro.sharding.grids import DFT_AXES_1D, DFT_AXES_2D, choose_dft_grid
+from repro.sharding.grids import (DFT_AXES_1D, DFT_AXES_2D, DFT_AXES_3D,
+                                  choose_dft_grid)
 
 
 def parse_kpts(spec: str):
@@ -29,19 +30,19 @@ def parse_kpts(spec: str):
 
 
 def parse_grid(spec: str, cfg: SCFConfig):
-    """'auto' | '4' | '2x2' | '2x2x2' … → ProcGrid (leading axes batch,
-    last axis fft — the PlaneWaveBasis convention for any rank)."""
+    """'auto' | '4' | '2x2' | '2x2x2' → ProcGrid (1D fft-only, 2D
+    batch×fft, 3D batch×fft×fft pencil — the PlaneWaveBasis convention:
+    first axis batch, trailing axes decompose the fft)."""
     if spec == "auto":
         return choose_dft_grid(nbands=cfg.nbands, nk=len(cfg.kpts),
                                diameter=cfg.diameter or cfg.n // 2)
     shape = [int(p) for p in spec.lower().split("x")]
-    if len(shape) == 1:
-        names = list(DFT_AXES_1D)
-    elif len(shape) == 2:
-        names = list(DFT_AXES_2D)
-    else:
-        names = [f"dft_b{i}" for i in range(len(shape) - 1)] + ["dft_f"]
-    return ProcGrid.create(shape, names)
+    try:
+        names = {1: DFT_AXES_1D, 2: DFT_AXES_2D, 3: DFT_AXES_3D}[len(shape)]
+    except KeyError:
+        raise SystemExit(f"--grid {spec!r}: at most 3 axes "
+                         "(batch x fft x fft)")
+    return ProcGrid.create(shape, list(names))
 
 
 def main(argv=None):
@@ -63,8 +64,16 @@ def main(argv=None):
                     choices=["eager", "lazy", "lazy_bf16"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--grid", default="auto",
-                    help="processing grid: 'auto', '4' (1D fft), or "
-                         "'2x2' (batch×fft 2D)")
+                    help="processing grid: 'auto', '4' (1D fft), "
+                         "'2x2' (batch×fft 2D), or '2x2x2' "
+                         "(batch×fft×fft pencil)")
+    ap.add_argument("--segment-padding", type=float, default=None,
+                    metavar="FRAC",
+                    help="per-segment padding budget for the stacked "
+                         "route: split the ragged k-stack into segments "
+                         "whose realized padding stays under FRAC "
+                         "(default: one segment padded to the global "
+                         "max sphere)")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="serial per-k loop instead of the double-buffered "
                          "k-point pipeline")
@@ -95,6 +104,7 @@ def main(argv=None):
         pipeline=not args.no_pipeline,
         stack_k={"auto": None, "on": True, "off": False}[args.stack_k],
         jit_step=args.jit_step,
+        segment_padding=args.segment_padding,
         policy=ExecPolicy.from_mode(args.policy))
     grid = parse_grid(args.grid, cfg)
 
@@ -113,7 +123,7 @@ def main(argv=None):
     for ik, eps in enumerate(res.eigenvalues):
         print(f"  k[{ik}] eigenvalues: "
               + "  ".join(f"{e:+.4f}" for e in eps))
-    route = (f"stacked band updates (padding "
+    route = (f"stacked band updates ({res.segments} segment(s), padding "
              f"{res.padding_fraction:.1%})" if res.stacked
              else "pipelined per-k H applies" if cfg.pipeline
              else "serial per-k H applies")

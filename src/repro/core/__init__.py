@@ -12,8 +12,9 @@ from .plan import FftPlan, Plan
 from .planewave import (PlaneWaveFFT, StackedPlaneWaveFFT, cube_spec,
                         kpoint_sphere, make_planewave_pair,
                         make_stacked_planewave_pair, padded_kinetic_table,
-                        padded_pack_tables, planewave_spec, sphere_gvectors,
-                        sphere_kinetic_row)
+                        padded_pack_tables, planewave_spec,
+                        segment_padding_fraction, segment_spheres,
+                        sphere_gvectors, sphere_kinetic_row)
 from .policy import ExecPolicy
 from .spectral import fft_conv, fourier_mixer
 
@@ -25,6 +26,7 @@ __all__ = [
     "make_planewave_pair",
     "make_stacked_planewave_pair", "padded_kinetic_table",
     "padded_pack_tables", "planewave_spec", "cube_spec",
+    "segment_padding_fraction", "segment_spheres",
     "sphere_gvectors", "sphere_kinetic_row",
     "ExecPolicy", "PlanCache",
     "global_plan_cache", "fft_conv", "fourier_mixer",

@@ -250,6 +250,79 @@ def padded_pack_tables(spheres) -> tuple[np.ndarray, np.ndarray]:
     return idx, valid
 
 
+def segment_spheres(spheres, max_padding: float = 0.25,
+                    size_divisor: int | None = None
+                    ) -> tuple[tuple[int, ...], ...]:
+    """Partition a ragged sphere batch into similar-``npacked`` segments.
+
+    The single global ``npacked_max`` pads every k-point to the *largest*
+    sphere — with strongly off-center k-shifts the padding fraction grows
+    without bound.  Segmenting bounds it: spheres are ordered by
+    descending ``npacked`` and greedily grouped so every segment's
+    realized padding fraction ``1 − Σ npacked / (len · max npacked)``
+    stays ≤ ``max_padding`` (each segment later pads only to its *own*
+    maximum).  A sphere that would push the current segment over the
+    budget closes it and starts the next one; singleton segments pad
+    nothing, so any budget ≥ 0 is satisfiable and the bound is hard.
+
+    ``size_divisor`` (> 1) constrains segment sizes to divisors of it —
+    the batch-axis size of a stacking grid, so every segment's
+    ``nk_seg · nbands`` stacked batch keeps the ``basis.stacks_k``
+    sharding contract.  A closed run is then emitted as divisor-sized
+    chunks, each chunk *individually* re-checked against the budget
+    before it is kept (a chunk's head is its own pad target, so a
+    suffix chunk pairing a big sphere with small ones can exceed the
+    run's overall padding — it is split further instead; singletons pad
+    nothing, so the bound stays hard).
+
+    Returns a tuple of index tuples: a partition of ``range(len)``,
+    descending ``npacked`` within and across segments.
+    """
+    spheres = list(spheres)
+    if not spheres:
+        raise ValueError("segment_spheres needs at least one sphere")
+    if not 0.0 <= max_padding < 1.0:
+        raise ValueError(f"max_padding must be in [0, 1), got {max_padding}")
+    sizes = [s.npacked for s in spheres]
+    order = sorted(range(len(spheres)), key=lambda i: (-sizes[i], i))
+    tol = max_padding + 1e-12
+
+    def pad_of(run: list[int], upto: int) -> float:
+        """Padding of run[:upto] padded to its own head's npacked."""
+        return 1.0 - (sum(sizes[j] for j in run[:upto])
+                      / (upto * sizes[run[0]]))
+
+    segs: list[tuple[int, ...]] = []
+
+    def flush(run: list[int]) -> None:
+        """Emit ``run`` as one segment — or, under ``size_divisor``, as
+        divisor-sized chunks each re-checked against the budget."""
+        while run:
+            keep = len(run)
+            if size_divisor and size_divisor > 1:
+                keep = max(k for k in range(1, len(run) + 1)
+                           if size_divisor % k == 0
+                           and pad_of(run, k) <= tol)
+            segs.append(tuple(run[:keep]))
+            run = run[keep:]
+
+    cur: list[int] = []
+    for i in order:
+        if cur and pad_of(cur + [i], len(cur) + 1) > tol:
+            flush(cur)
+            cur = []
+        cur.append(i)
+    if cur:
+        flush(cur)
+    return tuple(segs)
+
+
+def segment_padding_fraction(spheres, segment) -> float:
+    """Realized padding of one segment: 1 − Σ npacked / (len · max)."""
+    sizes = [spheres[i].npacked for i in segment]
+    return 1.0 - sum(sizes) / float(len(sizes) * max(sizes))
+
+
 def sphere_gvectors(sphere) -> np.ndarray:
     """(npacked, 3) G+k offsets from the sphere center, in units 2π/L.
 

@@ -38,7 +38,8 @@ import jax.numpy as jnp
 from repro.core import (Domain, ProcGrid, cube_spec, fftb,
                         global_plan_cache, kpoint_sphere,
                         make_stacked_planewave_pair, padded_kinetic_table,
-                        planewave_spec, sphere_gvectors, sphere_kinetic_row)
+                        planewave_spec, segment_padding_fraction,
+                        segment_spheres, sphere_gvectors, sphere_kinetic_row)
 from repro.core.cache import domains_key, grid_key
 from repro.core.policy import ExecPolicy
 
@@ -98,8 +99,18 @@ class PlaneWaveBasis:
 
     ``grid`` may be 1D (fft-only, the former pinned layout) or multi-axis.
     On a multi-axis grid ``batch_axes``/``fft_axes`` split the grid axes
-    between the band batch and the transform dims; by default the leading
-    axes are batch and the last axis is fft — a ``(batch, fft)`` mesh.
+    between the band batch and the transform dims; by default the first
+    axis is batch and the rest are fft — a ``(batch, fft)`` mesh, or the
+    pencil ``(batch, fft, fft)`` mesh on 3-axis grids (both transform
+    dims sharded, every all_to_all over one small axis).
+
+    ``segment_padding`` switches the ragged k-stacking from one global
+    ``npacked_max`` pad target to **segmented** stacking: k-points are
+    grouped into similar-``npacked`` segments (``core.segment_spheres``)
+    whose realized padding fraction never exceeds the budget, and every
+    stacked plan/table method takes the segment index.  ``None`` (the
+    default) keeps the single full-batch segment — all existing
+    single-segment behaviour, cache keys included, is unchanged.
     """
 
     def __init__(self, n: int, *, diameter: int | None = None,
@@ -107,6 +118,7 @@ class PlaneWaveBasis:
                  L: float | None = None, grid: ProcGrid | None = None,
                  batch_axes: tuple[int, ...] | None = None,
                  fft_axes: tuple[int, ...] | None = None,
+                 segment_padding: float | None = None,
                  policy: ExecPolicy | None = None, backend: str = "matmul"):
         self.n = int(n)
         self.d = int(diameter) if diameter is not None else self.n // 2
@@ -120,9 +132,10 @@ class PlaneWaveBasis:
         self.backend = backend
 
         if batch_axes is None:
-            # (batch, …, fft) convention: last axis transforms, the rest
-            # carry the band batch; a 1D grid stays fft-only
-            batch_axes = tuple(range(self.grid.ndim - 1))
+            # (batch, fft, …) convention: the first axis carries the band
+            # batch, every remaining axis transforms — (batch, fft) on 2D
+            # grids, the pencil (batch, fft, fft) on 3D; 1D stays fft-only
+            batch_axes = () if self.grid.ndim == 1 else (0,)
         self.batch_axes = tuple(batch_axes)
         if fft_axes is None:
             fft_axes = tuple(a for a in range(self.grid.ndim)
@@ -171,6 +184,26 @@ class PlaneWaveBasis:
         self._kin = [None] * nk
         self._gvec = [None] * nk
 
+        # segmented ragged stacking: partition k-points into similar-
+        # npacked segments under the padding budget; segment sizes are
+        # constrained to divide the batch-axis size so every segment's
+        # stacked nk_seg·nbands batch keeps the stacks_k sharding
+        # contract.  The default (None) is the single full-batch segment
+        # in k order — bitwise and cache-key identical to the
+        # pre-segmentation behaviour.
+        self.segment_padding = (float(segment_padding)
+                                if segment_padding is not None else None)
+        if self.segment_padding is None:
+            self.segments: tuple[tuple[int, ...], ...] = (tuple(range(nk)),)
+        else:
+            div = self.batch_procs if self.batch_procs > 1 else None
+            self.segments = segment_spheres(
+                self.spheres, self.segment_padding, size_divisor=div)
+        self._seg_of = [0] * nk
+        for s, seg in enumerate(self.segments):
+            for i in seg:
+                self._seg_of[i] = s
+
     # ----------------------------------------------------------------- size
     @property
     def nk(self) -> int:
@@ -193,27 +226,71 @@ class PlaneWaveBasis:
         """max_k npacked(k) — the padded lane count of the stacked batch.
 
         Both band-update engines run their Gram/Rayleigh-Ritz contractions
-        over exactly this many lanes (padded with exact zeros), so the
-        per-k and stacked paths share one rounding behaviour; see
-        ``dft.hamiltonian``.
+        over exactly this many lanes (padded with exact zeros) *within a
+        segment* (``pad_width``), so the per-k and stacked paths share
+        one rounding behaviour; see ``dft.hamiltonian``.
         """
         return max(s.npacked for s in self.spheres)
+
+    # ------------------------------------------------------------ segments
+    @property
+    def nsegments(self) -> int:
+        return len(self.segments)
+
+    def seg_of(self, ik: int) -> int:
+        """Index of the segment k-point ``ik`` stacks into."""
+        return self._seg_of[ik]
+
+    def pad_width(self, ik: int) -> int:
+        """Padded lane count of k-point ``ik``'s segment.
+
+        Both band-update engines contract their linalg over exactly this
+        many lanes for ``ik`` — the per-k oracle pads to it so stacked
+        and per-k execute identical GEMM shapes (bitwise agreement).
+        With the default single segment this is ``npacked_max``.
+        """
+        seg = self.segments[self._seg_of[ik]]
+        return max(self.spheres[i].npacked for i in seg)
+
+    @property
+    def padding_fraction(self) -> float:
+        """Padded lanes / total lanes over all segments.
+
+        With one segment this equals the stacked plan pair's
+        ``padding_fraction``; segmentation can only lower it.
+        """
+        used = sum(s.npacked for s in self.spheres)
+        lanes = sum(len(seg) * max(self.spheres[i].npacked for i in seg)
+                    for seg in self.segments)
+        return 1.0 - used / float(lanes)
+
+    @property
+    def segment_padding_fractions(self) -> tuple[float, ...]:
+        """Realized per-segment padding — each ≤ ``segment_padding``."""
+        return tuple(segment_padding_fraction(self.spheres, seg)
+                     for seg in self.segments)
 
     @property
     def stacks_k(self) -> bool:
         """True when k-points stack into the transforms' batch dimension.
 
-        On a (batch × fft) grid with nk dividing the batch-axis size, the
-        nk·nbands stacked batch splits evenly over the batch axes, so
-        k-points (not just bands) are sharded.  Both the density build and
-        the Hamiltonian apply route through the stacked plans then — one
-        batched transform per direction instead of nk per-k dispatches
-        (the pipelined per-k path remains as the fallback and oracle).
+        On a (batch × fft) grid, every segment's nk_seg·nbands stacked
+        batch must split evenly over the batch axes — segment length
+        divides the batch-axis size and nk_seg·nbands is divisible by it
+        — so k-points (not just bands) are sharded.  Both the density
+        build and the Hamiltonian apply route through the stacked plans
+        then — one batched transform per direction per segment instead
+        of nk per-k dispatches (the pipelined per-k path remains as the
+        fallback and oracle).  With the default single segment this is
+        the original ``nk | batch_procs`` condition; segmentation can
+        *restore* stacking for k-counts that do not divide the batch
+        axis (the segmenter caps segment sizes at divisors of it).
         """
         return (bool(self.batch_axes) and self.nk > 1
                 and self.batch_procs > 1
-                and self.batch_procs % self.nk == 0
-                and (self.nk * self.nbands) % self.batch_procs == 0)
+                and all(self.batch_procs % len(seg) == 0
+                        and (len(seg) * self.nbands) % self.batch_procs == 0
+                        for seg in self.segments))
 
     # ------------------------------------------------------- G bookkeeping
     def gvectors(self, ik: int) -> np.ndarray:
@@ -253,50 +330,62 @@ class PlaneWaveBasis:
             backend=self.backend, policy=self.policy)
         return inv, inv.inverse()       # mirror is memoized on the plan
 
-    def stacked_inverse_plan(self):
-        """One d³→n³ inverse plan batching all nk·nbands orbitals at once.
+    def _seg_spheres(self, seg: int):
+        """The segment's spheres, in segment (stack) order."""
+        return tuple(self.spheres[i] for i in self.segments[seg])
+
+    def stacked_inverse_plan(self, seg: int = 0):
+        """One d³→n³ inverse plan batching segment ``seg``'s orbitals.
 
         The spheres differ only in their pack tables; the staged-padding
         FFT itself sees the shared d³ bounding box, so every k-point's
-        cube can ride a single transform whose batch dim is nk·nbands —
-        sharding *k-points and bands* over the batch axes.  Used by the
-        density build when :attr:`stacks_k` holds.
+        cube can ride a single transform whose batch dim is
+        nk_seg·nbands — sharding *k-points and bands* over the batch
+        axes.  Equal-sized segments resolve to the *same* cache entry
+        (the batch domain is the only per-segment key ingredient), so
+        segmentation multiplies pack tables, not schedule searches.
+        Used by the density build when :attr:`stacks_k` holds.
         """
-        bdom = Domain((0,), (self.nk * self.nbands - 1,))
+        nks = len(self.segments[seg])
+        bdom = Domain((0,), (nks * self.nbands - 1,))
         bbox = Domain((0, 0, 0), (self.d - 1,) * 3)
         return fftb.plan_for(
             self._pw_spec, domains=(bdom, bbox), grid=self.grid,
             sizes=(self.n,) * 3, inverse=True, backend=self.backend,
             policy=self.policy)
 
-    def stacked_hamiltonian_plans(self):
+    def stacked_hamiltonian_plans(self, seg: int = 0):
         """(inverse, forward) ragged-batch stacked pair for the H apply.
 
-        One ``StackedPlaneWaveFFT`` pair batching all nk·nbands orbitals:
-        each k-point's packed coefficients are padded to ``npacked_max``
-        with the per-k validity baked into the pack/unpack index tables,
-        so the whole Hamiltonian sweep is two batched distributed
-        transforms regardless of nk and nbands.  Served from the
-        process-global PlanCache keyed by the full sphere set; the inner
-        d³→n³ plan is :meth:`stacked_inverse_plan` — shared (object
-        identity and cache accounting alike) with the density build.
+        One ``StackedPlaneWaveFFT`` pair batching segment ``seg``'s
+        nk_seg·nbands orbitals: each k-point's packed coefficients are
+        padded to the segment's own lane width (``pad_width``) with the
+        per-k validity baked into the pack/unpack index tables, so one
+        Hamiltonian sweep is two batched distributed transforms per
+        segment regardless of nk and nbands.  Served from the
+        process-global PlanCache keyed by the segment's sphere set; the
+        inner d³→n³ plan is :meth:`stacked_inverse_plan` — shared
+        (object identity and cache accounting alike) with the density
+        build and with every equal-sized segment.
         """
+        spheres = self._seg_spheres(seg)
         cache = global_plan_cache()
         key = ("stacked-pw", self._pw_spec,
-               domains_key(tuple(self.spheres)), (self.nk, self.nbands),
+               domains_key(spheres), (len(spheres), self.nbands),
                grid_key(self.grid), (self.n,) * 3, self.backend,
                self.policy)
         inv = cache.get_or_build(
             key, lambda: make_stacked_planewave_pair(
-                self.grid, self.n, self.spheres, self.nbands,
+                self.grid, self.n, list(spheres), self.nbands,
                 backend=self.backend, batch_axes=self.batch_axes,
                 fft_axes=self.fft_axes, policy=self.policy,
-                plan=self.stacked_inverse_plan())[0])
+                plan=self.stacked_inverse_plan(seg))[0])
         return inv, inv.inverse()   # mirror is memoized on the plan
 
-    def stacked_band_tables(self) -> StackedBandTables:
+    def stacked_band_tables(self, seg: int = 0) -> StackedBandTables:
         """Dense kinetic/mask/precond tables for the stacked band update.
 
+        Per segment — ``(nk_seg, pad_width)`` rows in segment order.
         Served from the process-global PlanCache alongside the stacked
         plan pair: the first request per sphere set builds the padded
         tables (host-side numpy + one replicated device_put), every later
@@ -306,13 +395,15 @@ class PlaneWaveBasis:
         ``1/(1 + kin)`` arithmetic for ``precond``), padded lanes are
         exact zeros in all three tables.
         """
+        spheres = self._seg_spheres(seg)
         cache = global_plan_cache()
-        key = ("stacked-band-tables", domains_key(tuple(self.spheres)),
-               (self.nk, self.nbands), grid_key(self.grid), self.L)
-        return cache.get_or_build(key, self._build_band_tables)
+        key = ("stacked-band-tables", domains_key(spheres),
+               (len(spheres), self.nbands), grid_key(self.grid), self.L)
+        return cache.get_or_build(
+            key, lambda: self._build_band_tables(spheres))
 
-    def _build_band_tables(self) -> StackedBandTables:
-        kin_np, valid = padded_kinetic_table(self.spheres, self.L)
+    def _build_band_tables(self, spheres) -> StackedBandTables:
+        kin_np, valid = padded_kinetic_table(list(spheres), self.L)
         kin = self.grid.replicate(jnp.asarray(kin_np))
         mask = self.grid.replicate(
             jnp.asarray(valid.astype(np.float32)))
@@ -331,4 +422,5 @@ class PlaneWaveBasis:
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"PlaneWaveBasis(n={self.n}, d={self.d}, nk={self.nk}, "
                 f"nbands={self.nbands}, grid={self.grid}, "
-                f"batch_axes={self.batch_axes}, fft_axes={self.fft_axes})")
+                f"batch_axes={self.batch_axes}, fft_axes={self.fft_axes}, "
+                f"segments={len(self.segments)})")

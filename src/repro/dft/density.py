@@ -25,33 +25,43 @@ import numpy as np
 import jax.numpy as jnp
 
 
-def density_from_stacked(basis, c_pad, occ) -> jnp.ndarray:
-    """ρ(r) from the padded (nk, nbands, npacked_max) coefficient stack.
+def density_from_stacked(basis, c_pad, occ, seg: int = 0) -> jnp.ndarray:
+    """Segment ``seg``'s density contribution from its padded
+    (nk_seg, nbands, pad_width) coefficient stack.
 
-    One nk·nbands-batched transform; k and bands shard the batch axes.
-    Rides the same ragged ``StackedPlaneWaveFFT`` pair as the stacked
-    Hamiltonian apply (padded per-k pack tables, shared d³→n³ plan), so
-    the stacked SCF path never needs the per-k sphere plans at all.
-    Padded lanes never reach the cube (the unpack scatter routes them to
-    the dump slot), so they contribute nothing to ρ.  Traceable — the
-    jitted SCF step runs it under ``jax.jit``; ``occ`` must be a
-    trace-time constant (numpy).
+    One nk_seg·nbands-batched transform; k and bands shard the batch
+    axes.  Rides the same ragged ``StackedPlaneWaveFFT`` pair as the
+    stacked Hamiltonian apply (padded per-k pack tables, shared d³→n³
+    plan), so the stacked SCF path never needs the per-k sphere plans at
+    all.  ``occ`` is the *full* (nk, nbands) table — the segment's rows
+    are selected here, weights included, so summing the per-segment
+    contributions (each carries the n³/ΔV prefactor, the sum is linear)
+    gives exactly ρ.  With the default single segment this is the whole
+    density.  Padded lanes never reach the cube (the unpack scatter
+    routes them to the dump slot), so they contribute nothing to ρ.
+    Traceable — the jitted SCF step runs it under ``jax.jit``; ``occ``
+    must be a trace-time constant (numpy).
     """
-    inv, _ = basis.stacked_hamiltonian_plans()
-    nk, nb, npm = c_pad.shape
-    psi = inv(inv.unpack(c_pad.reshape(nk * nb, npm)))
-    w = (basis.weights[:, None] * np.asarray(occ, np.float64)
+    inv, _ = basis.stacked_hamiltonian_plans(seg)
+    nks, nb, npm = c_pad.shape
+    psi = inv(inv.unpack(c_pad.reshape(nks * nb, npm)))
+    idx = list(basis.segments[seg])
+    w = (basis.weights[idx, None] * np.asarray(occ, np.float64)[idx]
          ).reshape(-1).astype(np.float32)
     rho = jnp.tensordot(jnp.asarray(w), jnp.abs(psi) ** 2, axes=(0, 0))
     return rho * jnp.float32(basis.n ** 3 / basis.dv)
 
 
 def _density_stacked(basis, coeffs, occ) -> jnp.ndarray:
-    """Per-k blocks → one stacked-batch density (see density_from_stacked)."""
-    inv, _ = basis.stacked_hamiltonian_plans()
-    c_pad = inv.stack(coeffs).reshape(basis.nk, basis.nbands,
-                                      inv.npacked_max)
-    return density_from_stacked(basis, c_pad, occ)
+    """Per-k blocks → stacked-batch density, one batch per segment."""
+    rho = None
+    for s, seg in enumerate(basis.segments):
+        inv, _ = basis.stacked_hamiltonian_plans(s)
+        c_pad = inv.stack([coeffs[ik] for ik in seg]).reshape(
+            len(seg), basis.nbands, inv.npacked_max)
+        part = density_from_stacked(basis, c_pad, occ, seg=s)
+        rho = part if rho is None else rho + part
+    return rho
 
 
 def density_from_orbitals(basis, coeffs, occ) -> jnp.ndarray:

@@ -120,21 +120,22 @@ def apply_hamiltonian_pipelined(basis, blocks, v_eff):
     return out
 
 
-def apply_hamiltonian_padded(basis, c_pad, v_eff, kin_pad=None):
-    """H·c on the padded ``(nk, nbands, npacked_max)`` coefficient stack.
+def apply_hamiltonian_padded(basis, c_pad, v_eff, kin_pad=None,
+                             seg: int = 0):
+    """H·c on one segment's padded ``(nk_seg, nbands, pad_width)`` stack.
 
     The array-native core of the stacked route: one batched inverse
     transform, one cube-space ``v_eff`` multiply, one batched forward —
     two distributed transforms for every k-point and band at once — plus
-    the dense padded kinetic diagonal (``basis.stacked_band_tables()``)
+    the dense padded kinetic diagonal (``basis.stacked_band_tables(seg)``)
     applied as a broadcast multiply.  Padded lanes stay exact zeros: the
     pack gather reads them from the zero slot and the kinetic table is
     zero there, so H·c is as inert on padding as c itself.  Traceable
     (the jitted SCF step runs it under ``jax.jit``).
     """
     if kin_pad is None:
-        kin_pad = basis.stacked_band_tables().kinetic
-    inv, fwd = basis.stacked_hamiltonian_plans()
+        kin_pad = basis.stacked_band_tables(seg).kinetic
+    inv, fwd = basis.stacked_hamiltonian_plans(seg)
     nk, nb, npm = c_pad.shape
     psi = inv(inv.unpack(c_pad.reshape(nk * nb, npm)))
     vpsi = fwd(psi * v_eff)                   # apply V, truncate back
@@ -143,13 +144,14 @@ def apply_hamiltonian_padded(basis, c_pad, v_eff, kin_pad=None):
 
 
 def apply_hamiltonian_stacked(basis, blocks, v_eff):
-    """H·c for *all* k-points in one ragged stacked batch.
+    """H·c for *all* k-points in ragged stacked batches, one per segment.
 
     The pipelined path still dispatches one sphere→cube→sphere round trip
-    per k-point; here every k-point's bands ride a single
-    ``(nk·nbands, npacked_max)`` padded batch through the basis's
+    per k-point; here each segment's bands ride a single
+    ``(nk_seg·nbands, pad_width)`` padded batch through the basis's
     ``StackedPlaneWaveFFT`` pair (:func:`apply_hamiltonian_padded`):
-    two distributed transforms per H sweep regardless of nk and nbands.
+    two distributed transforms per H sweep per segment regardless of nk
+    and nbands (one pair total with the default single segment).
     Raggedness (distinct ``npacked_k``) is absorbed by the padded pack
     tables, whose dump/zero slots keep padded lanes inert; the kinetic
     diagonal rides the dense padded table, which matches the per-k
@@ -160,13 +162,18 @@ def apply_hamiltonian_stacked(basis, blocks, v_eff):
     ``blocks``: list of (nbands, npacked_k) coefficient blocks, one per k.
     Returns the list of H·c blocks in k order.
     """
-    nk = len(blocks)
-    if nk == 0:
+    if len(blocks) == 0:
         return []
-    inv, _ = basis.stacked_hamiltonian_plans()
-    c_pad = inv.stack(blocks).reshape(nk, inv.nbands, inv.npacked_max)
-    hc = apply_hamiltonian_padded(basis, c_pad, v_eff)
-    return inv.split(hc.reshape(nk * inv.nbands, inv.npacked_max))
+    out = [None] * len(blocks)
+    for s, seg in enumerate(basis.segments):
+        inv, _ = basis.stacked_hamiltonian_plans(s)
+        c_pad = inv.stack([blocks[ik] for ik in seg]).reshape(
+            len(seg), inv.nbands, inv.npacked_max)
+        hc = apply_hamiltonian_padded(basis, c_pad, v_eff, seg=s)
+        hcs = inv.split(hc.reshape(len(seg) * inv.nbands, inv.npacked_max))
+        for j, ik in enumerate(seg):
+            out[ik] = hcs[j]
+    return out
 
 
 def orthonormalize(c):
@@ -194,15 +201,17 @@ def _pad_lanes(x, npm: int):
 
 
 def _padded_precond(basis, ik: int):
-    """Per-k Teter damping row, zero-padded to npacked_max lanes.
+    """Per-k Teter damping row, zero-padded to the k's segment lane width.
 
     Valid lanes carry the same f32 ``1/(1 + kinetic)`` arithmetic as the
     stacked ``precond`` table row (bitwise), built locally so the per-k
     fallback never touches the band-tables cache entry — its plan-cache
-    ledger stays purely per-k traffic.
+    ledger stays purely per-k traffic.  Padding to ``pad_width(ik)``
+    (``npacked_max`` with the default single segment) keeps the per-k
+    oracle's contraction lengths equal to the stacked engine's.
     """
     pre = 1.0 / (1.0 + basis.kinetic(ik))
-    return jnp.pad(pre, (0, basis.npacked_max - pre.shape[0]))
+    return jnp.pad(pre, (0, basis.pad_width(ik) - pre.shape[0]))
 
 
 def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
@@ -212,13 +221,13 @@ def update_bands(basis, ik: int, c, v_eff, *, steps: int = 3):
     orthonormalized against the bands, then a Rayleigh-Ritz solve in
     span{c, P r} keeps the lowest ``nbands`` vectors.  Two batched H
     applies per step, riding the per-k sphere plans; the linalg runs as
-    singleton-batch dispatches of the stacked kernels over
-    npacked_max-padded lanes (:func:`_pad_lanes`), so this serial oracle
+    singleton-batch dispatches of the stacked kernels over lanes padded
+    to the k's segment width (:func:`_pad_lanes`), so this serial oracle
     and the batched engine agree bit for bit.
 
     Returns (rotated coefficients, eigenvalues ascending, n_h_applies).
     """
-    npm = basis.npacked_max
+    npm = basis.pad_width(ik)
     pre = _padded_precond(basis, ik)
     napply = 0
     eps = None
@@ -314,9 +323,10 @@ def _rayleigh_ritz_stacked(c, d, hc, hd):
 
 
 def update_bands_stacked(basis, c_pad, v_eff, *, steps: int = 3,
-                         tables=None):
-    """Locally-optimal band update on the padded (nk, nbands, npacked_max)
-    coefficient stack — every stage batched over k.
+                         tables=None, seg: int = 0):
+    """Locally-optimal band update on one segment's padded
+    (nk_seg, nbands, pad_width) coefficient stack — every stage batched
+    over the segment's k-points.
 
     The per-k math of :func:`update_bands` with the orchestration layer
     removed: each step is two stacked H sweeps (two distributed
@@ -332,18 +342,18 @@ def update_bands_stacked(basis, c_pad, v_eff, *, steps: int = 3,
     H sweeps executed).
     """
     if tables is None:
-        tables = basis.stacked_band_tables()
+        tables = basis.stacked_band_tables(seg)
     kin, pre = tables.kinetic, tables.precond
     c = _replicated(basis, c_pad)
     eps = None
     nsweep = 0
     for _ in range(steps):
-        hc = _replicated(basis,
-                         apply_hamiltonian_padded(basis, c, v_eff, kin))
+        hc = _replicated(basis, apply_hamiltonian_padded(basis, c, v_eff,
+                                                         kin, seg=seg))
         nsweep += 1
         d = _replicated(basis, _descent_direction_stacked(c, hc, pre))
-        hd = _replicated(basis,
-                         apply_hamiltonian_padded(basis, d, v_eff, kin))
+        hd = _replicated(basis, apply_hamiltonian_padded(basis, d, v_eff,
+                                                         kin, seg=seg))
         nsweep += 1
         c, eps = _rayleigh_ritz_stacked(c, d, hc, hd)
     return c, eps, nsweep
@@ -374,17 +384,25 @@ def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3,
         stacked = bool(getattr(basis, "stacks_k", False))
     tr = get_tracer()
     if stacked:
-        with tr.span("band_update", route="stacked", nk=nk, steps=steps):
-            inv, _ = basis.stacked_hamiltonian_plans()
-            c_pad = inv.stack(coeffs).reshape(nk, inv.nbands,
-                                              inv.npacked_max)
-            c_pad, eps, nsweep = update_bands_stacked(basis, c_pad, v_eff,
-                                                      steps=steps)
-            cs = inv.split(c_pad.reshape(nk * inv.nbands,
-                                         inv.npacked_max))
-        return cs, [eps[ik] for ik in range(nk)], nsweep
-    npm = basis.npacked_max
+        cs = [None] * nk
+        eps_out = [None] * nk
+        nsweep = 0
+        with tr.span("band_update", route="stacked", nk=nk, steps=steps,
+                     segments=len(basis.segments)):
+            for s, seg in enumerate(basis.segments):
+                inv, _ = basis.stacked_hamiltonian_plans(s)
+                c_pad = inv.stack([coeffs[ik] for ik in seg]).reshape(
+                    len(seg), inv.nbands, inv.npacked_max)
+                c_pad, eps, nsweep = update_bands_stacked(
+                    basis, c_pad, v_eff, steps=steps, seg=s)
+                outs = inv.split(c_pad.reshape(len(seg) * inv.nbands,
+                                               inv.npacked_max))
+                for j, ik in enumerate(seg):
+                    cs[ik] = outs[j]
+                    eps_out[ik] = eps[j]
+        return cs, eps_out, nsweep
     cs = [_replicated(basis, c) for c in coeffs]
+    npms = [basis.pad_width(ik) for ik in range(nk)]
     pres = [_padded_precond(basis, ik) for ik in range(nk)]
     eps_out = [None] * nk
     nsweep = 0
@@ -394,12 +412,12 @@ def update_bands_all_k(basis, coeffs, v_eff, *, steps: int = 3,
         nsweep += 1
         ds = [_replicated(basis,
                           _descent_direction(cs[ik], hcs[ik], pres[ik],
-                                             npm))
+                                             npms[ik]))
               for ik in range(nk)]
         hds = [_replicated(basis, hd)
                for hd in apply_hamiltonian_pipelined(basis, ds, v_eff)]
         nsweep += 1
         for ik in range(nk):
             cs[ik], eps_out[ik] = _rayleigh_ritz(cs[ik], ds[ik], hcs[ik],
-                                                 hds[ik], npm)
+                                                 hds[ik], npms[ik])
     return cs, eps_out, nsweep

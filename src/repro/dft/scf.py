@@ -200,6 +200,11 @@ class SCFConfig:
                                       # band-update route)
     batch_axes: tuple | None = None   # grid axes carrying the band batch
     fft_axes: tuple | None = None     # grid axes carrying the transforms
+    segment_padding: float | None = None
+                                      # per-segment padding budget for the
+                                      # ragged k-stacking (None: one global
+                                      # npacked_max segment, the pre-
+                                      # segmentation behaviour)
     policy: ExecPolicy | None = None
     backend: str = "matmul"
 
@@ -219,9 +224,13 @@ class SCFResult:
     cache_stats: dict                 # global PlanCache counters (delta)
     grid_shape: tuple = ()            # processing-grid shape the run used
     stacked: bool = False             # H sweeps rode the k-stacked batch
-    padding_fraction: float = 0.0     # padded lanes / (nk · npacked_max)
+    padding_fraction: float = 0.0     # padded lanes / total stacked lanes
     band_update: str = "per-k"        # band-update route: "stacked" (the
                                       # batched engine) or "per-k"
+    segments: int = 1                 # ragged-stacking segment count
+    segment_padding_fractions: tuple = ()
+                                      # realized per-segment padding, each
+                                      # ≤ the configured segment_padding
     jitted: bool = False              # iterations ran as the fused jit step
     #: per-iteration telemetry: one dict per outer iteration with
     #: {iteration, energy, residual, seconds, transforms} — the record
@@ -266,22 +275,33 @@ def total_energy(basis, coeffs, rho, v_ext, hartree: HartreeSolver, occ,
 
 def total_energy_stacked(basis, c_pad, rho, v_ext, hartree: HartreeSolver,
                          occ, *, xc: bool = True, tables=None):
-    """Traceable E[{ψ}, ρ] on the padded (nk, nbands, npacked_max) stack.
+    """Traceable E[{ψ}, ρ] on the padded per-segment coefficient stacks.
 
-    The kinetic term is one masked einsum against the dense padded
-    kinetic table (padded lanes contribute exact zeros), everything else
-    is cube arithmetic — no per-k Python, no host transfers, so the
-    fused jit step can inline it.  Accumulates in f32 where the eager
-    :func:`total_energy` reduces per-band terms in host f64; the two
-    agree to f32 reduction precision (~1e-6 on the demo problems).
+    ``c_pad`` is either one (nk_seg, nbands, pad_width) stack (the
+    single-segment case) or a tuple/list of them, one per basis segment
+    in segment order.  The kinetic term is one masked einsum per segment
+    against the dense padded kinetic table (padded lanes contribute
+    exact zeros), everything else is cube arithmetic — no per-k Python,
+    no host transfers, so the fused jit step can inline it.  Accumulates
+    in f32 where the eager :func:`total_energy` reduces per-band terms
+    in host f64; the two agree to f32 reduction precision (~1e-6 on the
+    demo problems).
     """
+    if not isinstance(c_pad, (tuple, list)):
+        c_pad = (c_pad,)
     if tables is None:
-        tables = basis.stacked_band_tables()
-    w = jnp.asarray((basis.weights[:, None] * np.asarray(occ, np.float64)
-                     ).astype(np.float32))                  # (nk, nb)
-    per_band = jnp.sum(tables.kinetic[:, None, :] * jnp.abs(c_pad) ** 2,
-                       axis=-1)
-    e_kin = jnp.sum(w * per_band)
+        tables = [basis.stacked_band_tables(s) for s in range(len(c_pad))]
+    elif not isinstance(tables, (tuple, list)):
+        tables = (tables,)
+    occ64 = np.asarray(occ, np.float64)
+    e_kin = jnp.float32(0.0)
+    for s, (cs, tab) in enumerate(zip(c_pad, tables)):
+        idx = list(basis.segments[s])
+        w = jnp.asarray((basis.weights[idx, None] * occ64[idx]
+                         ).astype(np.float32))              # (nk_seg, nb)
+        per_band = jnp.sum(tab.kinetic[:, None, :] * jnp.abs(cs) ** 2,
+                           axis=-1)
+        e_kin = e_kin + jnp.sum(w * per_band)
     dv = jnp.float32(basis.dv)
     e_ext = jnp.sum(rho * v_ext) * dv
     vh = hartree(rho)
@@ -308,22 +328,34 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
     Returns (energies, residuals, eigs, ρ_out, transforms, converged,
     seconds) with the same accounting semantics as the eager loop.
     """
-    inv, _ = basis.stacked_hamiltonian_plans()
-    tables = basis.stacked_band_tables()
-    c_pad = inv.stack(coeffs).reshape(basis.nk, basis.nbands,
-                                      inv.npacked_max)
-    rho = density_from_stacked(basis, c_pad, occ)
+    segs = basis.segments
+    invs = [basis.stacked_hamiltonian_plans(s)[0] for s in range(len(segs))]
+    tables = [basis.stacked_band_tables(s) for s in range(len(segs))]
+    c_segs = tuple(
+        invs[s].stack([coeffs[ik] for ik in seg]).reshape(
+            len(seg), basis.nbands, invs[s].npacked_max)
+        for s, seg in enumerate(segs))
+    rho = sum(density_from_stacked(basis, c_segs[s], occ, seg=s)
+              for s in range(len(segs)))
     mix_state = jit_mixer_init(basis.n ** 3, cfg.mix_history)
     inelec = 1.0 / max(nelec, 1e-9)
 
-    def step(rho, c_pad, mix_state):
+    def step(rho, c_segs, mix_state):
         vh = hartree(rho)
         v_eff = v_ext + vh
         if cfg.xc:
             v_eff = v_eff + lda_exchange(rho)[1]
-        c_new, eps, _ = update_bands_stacked(
-            basis, c_pad, v_eff, steps=cfg.inner_steps, tables=tables)
-        rho_out = density_from_stacked(basis, c_new, occ)
+        c_new = []
+        eps_segs = []
+        for s in range(len(segs)):
+            c_s, eps_s, _ = update_bands_stacked(
+                basis, c_segs[s], v_eff, steps=cfg.inner_steps,
+                tables=tables[s], seg=s)
+            c_new.append(c_s)
+            eps_segs.append(eps_s)
+        c_new = tuple(c_new)
+        rho_out = sum(density_from_stacked(basis, c_new[s], occ, seg=s)
+                      for s in range(len(segs)))
         energy = total_energy_stacked(basis, c_new, rho_out, v_ext,
                                       hartree, occ, xc=cfg.xc,
                                       tables=tables)
@@ -332,7 +364,8 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
         mix_state, rho_next = jit_mix(mix_state, rho, rho_out,
                                       alpha=cfg.mix_alpha,
                                       warmup=cfg.mix_warmup)
-        return rho_next, c_new, mix_state, rho_out, eps, energy, resid
+        return (rho_next, c_new, mix_state, rho_out,
+                tuple(eps_segs), energy, resid)
 
     step = jax.jit(step, donate_argnums=(0, 1, 2))
 
@@ -352,8 +385,8 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
     for it in range(cfg.max_iter):
         it_t0 = time.perf_counter()
         with tr.span("scf_iteration", iteration=it, route="jit"):
-            rho, c_pad, mix_state, rho_out, eps, energy, resid = \
-                step(rho, c_pad, mix_state)
+            rho, c_segs, mix_state, rho_out, eps_segs, energy, resid = \
+                step(rho, c_segs, mix_state)
             # the float() conversions sync on the step's outputs, so
             # the span and the per-iteration seconds cover real work
             energy = float(energy)
@@ -365,7 +398,8 @@ def _jit_scf_loop(cfg: SCFConfig, basis, v_ext, hartree, occ,
                         "residual": resid,
                         "seconds": time.perf_counter() - it_t0,
                         "transforms": per_iter})
-        eigs = np.asarray(eps)
+        for s, seg in enumerate(segs):
+            eigs[list(seg)] = np.asarray(eps_segs[s])
         if callback is not None:
             callback(it, energy, resid)
         if (it > cfg.mix_warmup
@@ -405,6 +439,7 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         cfg.n, diameter=cfg.diameter, kpts=cfg.kpts, weights=cfg.weights,
         nbands=cfg.nbands, L=cfg.L, grid=grid,
         batch_axes=cfg.batch_axes, fft_axes=cfg.fft_axes,
+        segment_padding=cfg.segment_padding,
         policy=cfg.policy, backend=cfg.backend)
     cache0 = dict(global_plan_cache().stats)
     if v_ext is None:
@@ -526,8 +561,7 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
              for k in ("hits", "misses", "evictions")}
     delta["size"] = cache1["size"]
     assert abs(electron_count(basis, rho) - nelec) < 1e-3 * max(nelec, 1.0)
-    padding = (basis.stacked_hamiltonian_plans()[0].padding_fraction
-               if stacked else 0.0)
+    padding = basis.padding_fraction if stacked else 0.0
     return SCFResult(
         converged=converged, iterations=len(energies),
         energy=energies[-1] if energies else float("nan"),
@@ -537,4 +571,6 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         padding_fraction=padding,
         band_update="stacked" if stacked else "per-k",
         jitted=bool(cfg.jit_step),
+        segments=basis.nsegments,
+        segment_padding_fractions=basis.segment_padding_fractions,
         iteration_records=iteration_records)

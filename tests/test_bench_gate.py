@@ -1,6 +1,9 @@
 """Perf-trajectory gate plumbing: compare.py verdicts (including the
-unknown-scenario skip), atomic JSON writes, and the scf-2d / scf-stacked
-grid-shape pickers — pure-python, no transforms executed."""
+unknown-scenario skip and the schema-5 ``segments`` config key), atomic
+and merged JSON writes, ``--scenarios gate`` resolution, and the
+scf-2d / scf-stacked / scf-3d grid-shape pickers — pure-python, no
+transforms executed (the gate-resolution test runs the cheap plan_cache
+scenario only)."""
 import json
 import os
 import sys
@@ -17,7 +20,9 @@ from benchmarks.compare import main as compare_main  # noqa: E402
 from benchmarks.compare import unknown_scenarios  # noqa: E402
 from benchmarks.run import (atomic_json_dump,  # noqa: E402
                             require_stacked_route, scf_2d_grid_shape,
-                            scf_stacked_grid_shape)
+                            scf_3d_grid_shape, scf_stacked_grid_shape,
+                            write_scenario_records)
+from benchmarks.run import main as run_main  # noqa: E402
 
 
 def _record(tps=200.0, grid=(4,), converged=True, devices=4,
@@ -302,25 +307,118 @@ def test_atomic_json_dump_failure_leaves_old_contents(tmp_path):
     assert os.listdir(tmp_path) == ["BENCH_scf.json"]    # temp cleaned up
 
 
-# ----------------------------------------------------------- 2D grid split
+# ----------------------------------------------------------- grid pickers
 def test_scf_2d_grid_shape_splits():
     """Same policy as --grid auto (choose_dft_grid_shape), scenario-sized."""
     assert scf_2d_grid_shape(4) == (2, 2)        # CI's baseline shape
-    assert scf_2d_grid_shape(8) == (4, 2)        # matches the chooser
+    # from 8 devices the chooser's pencil tier wins ((2, 2, 2) — more fft
+    # parallelism than any feasible 2D split), so the 2D scenario skips
+    assert scf_2d_grid_shape(8) is None
     assert scf_2d_grid_shape(1) is None
     assert scf_2d_grid_shape(2) is None
     # device counts with no split dividing the scenario's nbands=4 /
     # diameter=8 skip gracefully instead of crashing PlaneWaveBasis
     assert scf_2d_grid_shape(6) is None          # batch factor 3 ∤ 4
     assert scf_2d_grid_shape(12) is None
-    assert scf_2d_grid_shape(16) is None         # pencil rule caps pf at 2
+    assert scf_2d_grid_shape(16) is None         # pencil (4, 2, 2) wins
 
 
 def test_scf_stacked_grid_shape_requires_stackable_batch():
     """scf-stacked runs only where basis.stacks_k will hold — the batch
     factor must carry whole k-points and divide the nk·nbands batch."""
     assert scf_stacked_grid_shape(4) == (2, 2)   # pb=2: 2|2·4, 2%2==0
-    assert scf_stacked_grid_shape(8) == (4, 2)   # pb=4: 4|8, 4%2==0
+    assert scf_stacked_grid_shape(8) is None     # chooser goes pencil
     assert scf_stacked_grid_shape(1) is None
     assert scf_stacked_grid_shape(2) is None     # no 2D split at all
     assert scf_stacked_grid_shape(6) is None     # scf-2d infeasible too
+
+
+def test_scf_3d_grid_shape_pencil():
+    """scf-3d runs exactly where the chooser picks a (batch, fft, fft)
+    pencil — 8 devices for the scenario shape; smaller counts or counts
+    the pencil rules reject skip gracefully."""
+    assert scf_3d_grid_shape(8) == (2, 2, 2)     # CI's 8-device shape
+    assert scf_3d_grid_shape(16) == (4, 2, 2)
+    for nd in (1, 2, 4, 6, 12):                  # chooser stays 1D/2D
+        assert scf_3d_grid_shape(nd) is None
+    assert scf_3d_grid_shape(7) is None          # prime → 1D
+
+
+# ------------------------------------------------- segments as config key
+def test_gate_segments_is_optional_config_key():
+    """Schema-5 ``segments`` gates only when the baseline carries it: a
+    changed segmentation executes different batched transforms (config
+    mismatch), while schema-4 baselines without the field compare as
+    before — the bridge that lets old baselines keep gating."""
+    base4 = {"scf-3d": _record(grid=(2, 2, 2), band_update="stacked")}
+    cur = {"scf-3d": dict(_record(grid=(2, 2, 2), band_update="stacked"),
+                          segments=2)}
+    assert compare_records(cur, base4) == []     # baseline predates field
+    base5 = {"scf-3d": dict(_record(grid=(2, 2, 2),
+                                    band_update="stacked"), segments=2)}
+    cur_same = {"scf-3d": dict(_record(grid=(2, 2, 2),
+                                       band_update="stacked"), segments=2)}
+    assert compare_records(cur_same, base5) == []
+    cur_resegmented = {"scf-3d": dict(
+        _record(400.0, grid=(2, 2, 2), band_update="stacked"), segments=1)}
+    failures = compare_records(cur_resegmented, base5)
+    assert any("segments changed" in f for f in failures)
+    # a segmentation mismatch is the gate's business, never drift's
+    assert drifted_scenarios(cur_resegmented, base5, 0.10) == []
+
+
+# -------------------------------------------------------- gate resolution
+def test_run_main_gate_resolves_scenarios_from_baseline(tmp_path, capsys):
+    """--scenarios gate runs exactly what the baseline gates — the single
+    source of truth CI and the drift automation share.  plan_cache is the
+    cheapest real scenario, so the resolution path runs end to end."""
+    base = tmp_path / "base.json"
+    _dump(base, {"plan_cache": _record()})
+    run_main(["--scenarios", "gate", "--baseline", str(base),
+              "--json-out", str(tmp_path / "out.json")])
+    out = capsys.readouterr().out
+    assert "gate scenarios from" in out and "plan_cache" in out
+    assert "plan_build_cold" in out              # the scenario actually ran
+
+
+def test_run_main_gate_rejects_unknown_only_baseline(tmp_path, capsys):
+    """A baseline gating only scenarios this harness cannot run is a hard
+    error (plus a visible warning), not a silent empty run."""
+    base = tmp_path / "base.json"
+    _dump(base, {"scf-quantum": _record()})
+    with pytest.raises(SystemExit):
+        run_main(["--scenarios", "gate", "--baseline", str(base)])
+    assert "cannot run them" in capsys.readouterr().out
+    with pytest.raises(SystemExit):              # unreadable baseline
+        run_main(["--scenarios", "gate",
+                  "--baseline", str(tmp_path / "missing.json")])
+
+
+# ------------------------------------------------------------ merge writes
+def test_write_scenario_records_merges_into_existing(tmp_path):
+    """CI's two-step artifact: the 8-device scf-3d run folds into the
+    4-device BENCH_scf.json (merge=True); a later record for the same
+    scenario wins; without merge the file is replaced wholesale."""
+    out = tmp_path / "BENCH_scf.json"
+    write_scenario_records({"scf": _record(200.0)}, str(out))
+    merged = write_scenario_records(
+        {"scf-3d": _record(300.0, grid=(2, 2, 2), band_update="stacked")},
+        str(out), merge=True)
+    assert set(merged) == {"scf", "scf-3d"}
+    data = json.load(open(out))
+    assert data["schema"] == 5
+    assert set(data["scenarios"]) == {"scf", "scf-3d"}
+    assert data["scenarios"]["scf"]["transforms_per_s"] == 200.0
+    # re-measuring a scenario overwrites its record in place
+    write_scenario_records({"scf": _record(150.0)}, str(out), merge=True)
+    data = json.load(open(out))
+    assert data["scenarios"]["scf"]["transforms_per_s"] == 150.0
+    assert set(data["scenarios"]) == {"scf", "scf-3d"}
+    # merge against a missing file degrades to a plain write
+    fresh = tmp_path / "fresh.json"
+    assert set(write_scenario_records({"scf": _record()}, str(fresh),
+                                      merge=True)) == {"scf"}
+    # without merge, stale scenarios are dropped — a full re-run owns
+    # the artifact
+    write_scenario_records({"scf": _record()}, str(out))
+    assert set(json.load(open(out))["scenarios"]) == {"scf"}

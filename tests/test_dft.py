@@ -188,10 +188,14 @@ def test_choose_dft_grid_shape_rules():
     assert choose_dft_grid_shape(2, nbands=4, diameter=8) == (2,)
     # past the pencil limit → batch×fft split
     assert choose_dft_grid_shape(4, nbands=4, diameter=8, nk=2) == (2, 2)
-    assert choose_dft_grid_shape(8, nbands=4, diameter=8) == (4, 2)
+    # 8 devices, d=8: the pencil tier puts 2·2 devices on the transforms
+    # (beating the best single fft axis pf=2) with pb=2 on the bands
+    assert choose_dft_grid_shape(8, nbands=4, diameter=8) == (2, 2, 2)
+    assert choose_dft_grid_shape(8, nbands=4, diameter=8, nk=2) == (2, 2, 2)
     # the batch factor must divide nbands (a hard basis requirement):
-    # k-stacking never excuses it, so infeasible configs fall back to 1D
-    assert choose_dft_grid_shape(8, nbands=2, diameter=8, nk=2) == (8,)
+    # k-stacking never excuses it — though the pencil tier's smaller
+    # pb=2 rescues nbands=2, which the 2D-only ladder dropped to 1D
+    assert choose_dft_grid_shape(8, nbands=2, diameter=8, nk=2) == (2, 2, 2)
     assert choose_dft_grid_shape(8, nbands=3, diameter=8, nk=3) == (8,)
     # no valid split → fall back to 1D (basis raises the actionable error)
     assert choose_dft_grid_shape(4, nbands=3, diameter=7) == (4,)
@@ -212,15 +216,16 @@ def test_choose_dft_grid_shape_edge_cases():
     # unmet, but a valid (pb | nbands) split still beats 1D — the basis
     # simply runs the pipelined per-k fallback on it (stacks_k False)
     assert choose_dft_grid_shape(4, nbands=4, diameter=8, nk=3) == (2, 2)
-    assert choose_dft_grid_shape(8, nbands=4, diameter=8, nk=3) == (4, 2)
+    assert choose_dft_grid_shape(8, nbands=4, diameter=8, nk=3) == (2, 2, 2)
     b = PlaneWaveBasis(16, kpts=((0, 0, 0), (0.3, 0, 0), (0, 0.3, 0)),
                        nbands=4, grid=ProcGrid.create_abstract([2, 2]))
     assert not b.stacks_k                     # nk=3 ∤ pb=2 → fallback
     # nbands smaller than every candidate batch factor → 1D fallback
-    # (16 devices, d=16: pf ≤ 4 by the pencil rule, so pb ∈ {4, 8, 16},
-    # none of which divides nbands ≤ 2)
     assert choose_dft_grid_shape(8, nbands=1, diameter=8) == (8,)
-    assert choose_dft_grid_shape(16, nbands=2, diameter=16, nk=2) == (16,)
+    # … but the pencil tier's pb=2 keeps nbands=2 on a 3-axis split
+    # where the 2D-only ladder (pf ≤ 4 ⇒ pb ∈ {4, 8, 16}) fell to 1D
+    assert choose_dft_grid_shape(16, nbands=2, diameter=16, nk=2) \
+        == (2, 4, 2)
     assert choose_dft_grid_shape(16, nbands=3, diameter=8, nk=2) == (16,)
     # nbands ≥ the batch factor but not divisible → still 1D
     assert choose_dft_grid_shape(4, nbands=5, diameter=8) == (4,)
@@ -413,6 +418,113 @@ def test_stacked_engine_two_transforms_per_sweep_no_perk_linalg(basis2):
     update_bands_all_k(basis2, coeffs, v, steps=2, stacked=False)
     assert FftPlan.executions - ex0 == 2 * nsweep * basis2.nk
     assert H.PERK_LINALG_CALLS - pk0 == 2 * 2 * basis2.nk
+
+
+# ---------------------------------------------- segmented ragged stacking
+KPTS3 = ((0.0, 0.0, 0.0), (0.37, 0.21, 0.11), (0.5, 0.5, 0.5))
+
+
+def test_basis_default_single_segment(basis2):
+    """segment_padding=None keeps the pre-segmentation contract: one
+    identity-ordered full-batch segment, pad_width == npacked_max — so
+    every cache key and stacked code path is unchanged."""
+    assert basis2.segment_padding is None
+    assert basis2.segments == (tuple(range(basis2.nk)),)
+    assert basis2.nsegments == 1
+    for ik in range(basis2.nk):
+        assert basis2.seg_of(ik) == 0
+        assert basis2.pad_width(ik) == basis2.npacked_max
+
+
+def test_basis_segmented_partition_and_budget(g1):
+    """A padding budget partitions the k-points into similar-npacked
+    segments whose realized padding stays under the budget; pad_width
+    becomes per-segment."""
+    budget = 0.02
+    b = PlaneWaveBasis(16, kpts=KPTS3, nbands=3, grid=g1,
+                       segment_padding=budget)
+    flat = sorted(i for seg in b.segments for i in seg)
+    assert flat == list(range(b.nk))        # exact partition of the k range
+    assert b.nsegments >= 2                 # 3 ragged spheres under 2%
+    assert len(b.segment_padding_fractions) == b.nsegments
+    for s, seg in enumerate(b.segments):
+        assert b.segment_padding_fractions[s] <= budget + 1e-9
+        width = max(b.npacked(ik) for ik in seg)
+        for ik in seg:
+            assert b.seg_of(ik) == s
+            assert b.pad_width(ik) == width
+    # the global realized padding is a weighted mean of per-segment ones
+    assert 0.0 <= b.padding_fraction <= budget + 1e-9
+
+
+def test_basis_pencil_grid_specs():
+    """(batch, fft, fft) pencil convention: first axis batch, the two
+    trailing axes jointly decompose the transforms; the spec strings
+    carry both fft mesh axes.  Abstract grids suffice — construction
+    and validation never execute."""
+    g3 = ProcGrid.create_abstract([2, 2, 2])
+    b = PlaneWaveBasis(16, kpts=KPTS2, nbands=4, grid=g3)
+    assert b.batch_axes == (0,) and b.fft_axes == (1, 2)
+    assert b.batch_procs == 2 and b.fft_procs == 4
+    assert b._pw_spec == "b{0} x{1,2} y z -> b{0} X Y Z{1,2}"
+    assert b._cube_spec == "x y z{1,2} -> X Y Z{1,2}"
+    assert b.stacks_k                       # nk=2 divides pb=2
+
+
+def test_segmentation_restores_k_stacking():
+    """nk=3 cannot stack as one batch on a pb=2 grid (3 ∤ 2), but
+    segment sizes are constrained to divide the batch-axis size, so a
+    segmented basis recovers the stacked route segment by segment."""
+    g2 = ProcGrid.create_abstract([2, 2])
+    kpts3 = ((0, 0, 0), (0.3, 0, 0), (0, 0.3, 0))
+    b0 = PlaneWaveBasis(16, kpts=kpts3, nbands=4, grid=g2)
+    assert not b0.stacks_k                  # nk=3 ∤ pb=2 → fallback
+    b = PlaneWaveBasis(16, kpts=kpts3, nbands=4, grid=g2,
+                       segment_padding=0.25)
+    assert b.stacks_k                       # every segment shards evenly
+    for seg in b.segments:
+        assert b.batch_procs % len(seg) == 0
+        assert (len(seg) * b.nbands) % b.batch_procs == 0
+
+
+def test_segmented_stacked_bitwise_vs_perk(g1):
+    """Acceptance: segmented stacked H applies and band updates are
+    BITWISE equal to the per-k path — the per-k oracle pads its linalg
+    to the k's segment lane width, so both routes execute identical
+    GEMM contraction lengths and the f32 sums associate identically."""
+    from repro.dft.density import _density_stacked
+    b = PlaneWaveBasis(16, kpts=KPTS3, nbands=3, grid=g1,
+                       segment_padding=0.02)
+    assert b.nsegments == 2
+    rng = np.random.default_rng(17)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    coeffs = [_rand_bands(rng, b.nbands, b.npacked(ik))
+              for ik in range(b.nk)]
+    stacked = apply_hamiltonian_stacked(b, coeffs, v)
+    for ik in range(b.nk):
+        ref = apply_hamiltonian(b, ik, coeffs[ik], v)
+        assert float(jnp.abs(stacked[ik] - ref).max()) == 0.0
+    serial, serial_eps = [], []
+    for ik in range(b.nk):
+        c, eps, _ = update_bands(b, ik, coeffs[ik], v, steps=3)
+        serial.append(c)
+        serial_eps.append(eps)
+    ex0 = FftPlan.executions
+    stk, stk_eps, nsweep = update_bands_all_k(b, coeffs, v, steps=3,
+                                              stacked=True)
+    # per-segment engine: one batched inverse + one batched forward per
+    # sweep per segment
+    assert FftPlan.executions - ex0 == 2 * nsweep * b.nsegments
+    for ik in range(b.nk):
+        assert float(jnp.abs(stk[ik] - serial[ik]).max()) == 0.0
+        assert float(jnp.abs(stk_eps[ik] - serial_eps[ik]).max()) == 0.0
+    # density sums per-segment contributions — summation *order* differs
+    # from the per-k accumulation, so f32 noise (not bitwise) is expected
+    occ = np.ones((b.nk, b.nbands))
+    rho_ref = density_from_orbitals(b, serial, occ)
+    rho_seg = _density_stacked(b, serial, occ)
+    assert (float(jnp.abs(rho_seg - rho_ref).max())
+            / float(rho_ref.max())) < 1e-6
 
 
 def test_scf_jit_step_matches_eager_and_dispatches_only_at_trace(basis2):
@@ -621,6 +733,58 @@ assert abs(resj.energy - res.energy) < 1e-3, (resj.energy, res.energy)
 print("OK", res.iterations, resj.iterations, round(res.energy, 5))
 """
     out = dist(script, n_devices=4)
+    assert "OK" in out
+
+
+def test_scf_pencil_grid_8dev(dist):
+    """Acceptance: SCF on the chooser's (2, 2, 2) batch×fft×fft pencil
+    grid with 8 forced host devices — two decomposed fft axes — converges
+    to the 1-device energy on the stacked route; a segmented run (tight
+    padding budget → per-k segments) converges to the same energy with
+    zero realized padding and rides the jit step unchanged."""
+    script = """
+import numpy as np, jax
+from repro.dft import PlaneWaveBasis, SCFConfig, run_scf
+from repro.sharding.grids import choose_dft_grid
+assert jax.device_count() == 8
+grid = choose_dft_grid(nbands=4, nk=2, diameter=8)
+assert grid.shape == (2, 2, 2), grid.shape
+
+basis = PlaneWaveBasis(16, kpts=((0,0,0),(0.5,0.5,0.5)), nbands=4,
+                       grid=grid)
+assert basis.batch_axes == (0,) and basis.fft_axes == (1, 2)
+assert basis.fft_procs == 4 and basis.stacks_k
+
+cfg = SCFConfig(n=16, nbands=4, kpts=((0,0,0),(0.5,0.5,0.5)), max_iter=50)
+res = run_scf(cfg, grid=grid)
+assert res.converged, (res.energies, res.residuals)
+assert res.grid_shape == (2, 2, 2)
+assert res.stacked and res.band_update == "stacked"
+assert res.segments == 1 and res.padding_fraction > 0.0
+assert abs(res.energy - (-1.9197)) < 5e-3, res.energy
+
+# segmented: the 2% budget splits the 280/254-packed spheres into two
+# per-k segments (each 0% padding); same converged energy
+cfg2 = SCFConfig(n=16, nbands=4, kpts=((0,0,0),(0.5,0.5,0.5)),
+                 max_iter=50, segment_padding=0.02)
+res2 = run_scf(cfg2, grid=grid)
+assert res2.converged, (res2.energies, res2.residuals)
+assert res2.stacked and res2.band_update == "stacked"
+assert res2.segments == 2
+assert res2.padding_fraction == 0.0
+assert tuple(res2.segment_padding_fractions) == (0.0, 0.0)
+assert abs(res2.energy - res.energy) < 1e-3, (res2.energy, res.energy)
+
+# the fused jit step on the segmented pencil basis
+res3 = run_scf(SCFConfig(n=16, nbands=4, kpts=((0,0,0),(0.5,0.5,0.5)),
+                         max_iter=50, segment_padding=0.02,
+                         jit_step=True), grid=grid)
+assert res3.converged and res3.jitted and res3.segments == 2
+assert abs(res3.energy - res.energy) < 1e-3, (res3.energy, res.energy)
+print("OK", res.iterations, res2.iterations, res3.iterations,
+      round(res.energy, 5))
+"""
+    out = dist(script, n_devices=8)
     assert "OK" in out
 
 

@@ -134,3 +134,35 @@ def test_straggler_monitor_flags_outliers(seed, k):
     for i in range(20):
         mon.observe(i, 0.1 + 0.001 * rng.standard_normal())
     assert mon.observe(100, 10.0 * k) is True
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.lists(st.tuples(st.floats(0.0, 0.9), st.floats(0.0, 0.9),
+                          st.floats(0.0, 0.9)),
+                min_size=1, max_size=6),
+       st.sampled_from([0.0, 0.005, 0.02, 0.1, 0.25]),
+       st.sampled_from([None, 1, 2, 3, 4]))
+@settings(**SET)
+def test_segmenter_padding_never_exceeds_budget(seed, shifts, budget,
+                                                divisor):
+    """Segmented ragged stacking invariants on randomized k-shift sets:
+    ``segment_spheres`` must (a) partition the sphere list exactly, (b)
+    keep every segment's *realized* padding within the budget — a
+    singleton segment always realizes 0%, so a valid partition exists
+    for any budget — and (c) honor the size-divisor contract (segment
+    lengths divide the batch-axis size, so every segment's stacked batch
+    still shards evenly)."""
+    from repro.core import (kpoint_sphere, segment_padding_fraction,
+                            segment_spheres)
+    spheres = [kpoint_sphere(8)] + [kpoint_sphere(8, s) for s in shifts]
+    segs = segment_spheres(spheres, budget, size_divisor=divisor)
+    covered = sorted(i for seg in segs for i in seg)
+    assert covered == list(range(len(spheres)))       # exact partition
+    for seg in segs:
+        assert segment_padding_fraction(spheres, seg) <= budget + 1e-9
+        if divisor and divisor > 1:       # 1 shards anything: no constraint
+            assert divisor % len(seg) == 0
+        # segments group by descending npacked: the first element is the
+        # pad target every other member is padded up to
+        sizes = [spheres[i].npacked for i in seg]
+        assert sizes[0] == max(sizes)
