@@ -136,7 +136,7 @@ def bench_local_fft(rows, quick=False):
             gflops = 8 * n * n * batch / (us * 1e-6) / 1e9
             rows.append((f"local_fft_{backend}_n{n}", us, round(gflops, 2)))
         # rectangular (pad-fused) form — the plane-wave stage shape
-        f = jax.jit(lambda a: local_dft(a, -1, 2 * n, backend="matmul"))
+        f = jax.jit(lambda a, m=2 * n: local_dft(a, -1, m, backend="matmul"))
         us = _timeit(f, x)
         rows.append((f"local_fft_rect_n{n}to{2*n}", us,
                      round(8 * 2 * n * n * batch / (us * 1e-6) / 1e9, 2)))

@@ -1,0 +1,49 @@
+"""``repro.check`` — static analysis for the FFTB repo and its configs.
+
+Three coordinated analyzers, one :class:`~repro.check.diagnostics.Diagnostic`
+currency:
+
+* :mod:`repro.check.preflight` — feasibility diagnostics for transform
+  specs, plane-wave bases and service configs *before any device work*:
+  spec-DSL well-formedness, grid divisibility, stackability, dtype/shape
+  contracts and plan-cache byte budgets, each with a stable ``FFTB1xx``
+  code and a fix hint.  ``fftb.preflight(...)`` is the public alias.
+* :mod:`repro.check.lint` — an AST linter for the repo's own invariants
+  (``FFTB2xx``): no host syncs or plan builds inside traced functions,
+  honest wall-clocks around device dispatch, no bare ``threading.Lock``
+  on the serving path.
+* :mod:`repro.check.locks` — an instrumented lock wrapper recording the
+  per-thread held-lock graph; detects lock-order cycles and
+  lock-held-across-dispatch hazards (``FFTB3xx``).  Free when disabled.
+
+CLI: ``python -m repro.check {preflight,lint,codes} ...``.
+
+``diagnostics`` and ``locks`` are import-light (stdlib only) so the core
+and serve layers can depend on them; ``preflight`` pulls in
+``repro.core`` and is loaded lazily (PEP 562) to keep the dependency
+graph acyclic: core → check.locks/diagnostics, check.preflight → core.
+"""
+
+from .diagnostics import (CODES, Diagnostic, DiagnosticError, Severity,
+                          render_diagnostics)
+from .locks import (LockOrderError, TrackedLock, check_dispatch_hazard,
+                    disable_lock_checking, enable_lock_checking,
+                    lock_violations)
+
+_PREFLIGHT_NAMES = ("preflight", "preflight_transform", "preflight_basis",
+                    "preflight_service", "preflight_request")
+
+__all__ = [
+    "CODES", "Diagnostic", "DiagnosticError", "Severity",
+    "render_diagnostics",
+    "TrackedLock", "LockOrderError", "enable_lock_checking",
+    "disable_lock_checking", "check_dispatch_hazard", "lock_violations",
+    *_PREFLIGHT_NAMES,
+]
+
+
+def __getattr__(name: str):
+    if name in _PREFLIGHT_NAMES:
+        from . import preflight as _pf
+        return getattr(_pf, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,414 @@
+"""Repo-invariant AST linter — machine-checked versions of the rules
+reviewers have been enforcing by hand since PR 5/PR 7.
+
+Rules (all ``FFTB2xx``, suppressible per line with ``# noqa: FFTB2xx``):
+
+* **FFTB201** — host-sync calls (``float(<call>)``, ``np.asarray``,
+  ``.block_until_ready()``, ``.item()``) inside a function reachable
+  from a *traced root*: a ``@jax.jit``-decorated function, a function
+  passed to ``jax.jit(...)`` / ``shard_map(...)``, or a name listed in
+  ``TRACED_ROOTS``.  A host sync under tracing either fails outright or
+  silently severs the fused graph.
+* **FFTB202** — plan construction (``PlanCache.get_or_build``,
+  ``fftb.plan_for``, the basis plan getters) inside a traced function.
+  Plans must be fetched eagerly at trace time (the PR 5 pattern: fetch
+  before ``jax.jit``, close over the results).
+* **FFTB203** — ``time.time()`` used for *interval* timing (two reads,
+  or subtracting a ``time.time()``-assigned variable).  Wall-clock
+  intervals use ``time.perf_counter()``; a single ``time.time()`` epoch
+  stamp (checkpoint metadata) is fine.
+* **FFTB204** — a ``perf_counter`` timing window around jax/jnp compute
+  with no sync marker (``block_until_ready`` / ``timed_call`` /
+  ``np.asarray`` / ``.sync``) in the function: the interval would
+  measure dispatch, not execution (the PR 7 honest-clock rule).
+* **FFTB205** — a bare ``threading.Lock()``/``RLock()`` in ``serve/``
+  or ``core/cache.py``: the serving path must use
+  ``repro.check.locks.TrackedLock`` so lock-order checking can see it.
+
+The linter is stdlib-only (``ast``) — it never imports the modules it
+checks, so ``python -m repro.check lint src/`` runs without jax.
+Reachability is a same-module call graph over simple names
+(``foo(...)``, ``self.foo(...)``); cross-module reachability is
+approximated by ``TRACED_ROOTS`` naming the known traced entry points.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from .diagnostics import Diagnostic, error
+
+__all__ = ["lint_paths", "lint_source", "TRACED_ROOTS"]
+
+#: function names treated as traced roots in *any* module, covering the
+#: traced surfaces the AST alone cannot see (methods invoked from jitted
+#: stage executors built in another module).
+TRACED_ROOTS: frozenset = frozenset({
+    "jit_step",
+    "_execute_traced",
+    "_raw_apply",
+    "_raw_apply_lazy",
+})
+
+#: plan-construction entry points (FFTB202)
+_PLAN_BUILDERS = frozenset({
+    "get_or_build", "plan_for", "plans_for_k", "cube_plans",
+    "stacked_inverse_plan", "stacked_hamiltonian_plans",
+    "stacked_band_tables", "make_planewave_pair",
+    "make_stacked_planewave_pair",
+})
+
+#: files where FFTB205 applies (relative-path substring match)
+_LOCK_SCOPE = ("serve/", "core/cache.py")
+_LOCK_EXEMPT = ("check/locks.py",)
+
+_NOQA = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?", re.I)
+
+
+# ----------------------------------------------------------- AST helpers
+def _dotted(node) -> str:
+    """'jax.jit' for Attribute chains, 'jit' for Names, '' otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _call_name(call: ast.Call) -> str:
+    return _dotted(call.func)
+
+
+def _call_attr(call: ast.Call) -> str:
+    """The method/function name of a call, even on a call-result chain
+    (``jnp.fft.fftn(x).block_until_ready()`` → ``block_until_ready``)."""
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return _attr_of(_call_name(call))
+
+
+def _root_of(dotted: str) -> str:
+    return dotted.split(".", 1)[0]
+
+
+def _attr_of(dotted: str) -> str:
+    return dotted.rsplit(".", 1)[-1]
+
+
+_JIT_WRAPPERS = ("jax.jit", "jit", "partial")
+_SHARD_WRAPPERS = ("shard_map", "compat.shard_map", "jax_shard_map")
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    name = _call_name(call)
+    if name in ("jax.jit", "jit"):
+        return True
+    # functools.partial(jax.jit, ...) applied as a decorator
+    if _attr_of(name) == "partial" and call.args:
+        return _call_name_of_expr(call.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _call_name_of_expr(node) -> str:
+    return _dotted(node)
+
+
+class _FnInfo:
+    __slots__ = ("node", "name", "calls", "refs", "is_root")
+
+    def __init__(self, node: ast.AST, name: str):
+        self.node = node
+        self.name = name
+        self.calls: set[str] = set()
+        self.refs: set[str] = set()
+        self.is_root = False
+
+
+def _own_statements(fn) -> list[ast.AST]:
+    """The function's body nodes, with nested function bodies cut out.
+
+    Nested defs are separate _FnInfo entries; their *names* still count
+    as references from the enclosing function.
+    """
+    out: list[ast.AST] = []
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        out.append(node)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            stack.append(child)
+    return out
+
+
+class _ModuleIndex:
+    """All function defs in one module + the traced-reachability set."""
+
+    def __init__(self, tree: ast.Module, extra_roots=()):
+        self.fns: list[_FnInfo] = []
+        self._by_name: dict[str, list[_FnInfo]] = {}
+        roots = TRACED_ROOTS | frozenset(extra_roots)
+        self._collect(tree)
+        for fn in self.fns:
+            node = fn.node
+            if fn.name in roots:
+                fn.is_root = True
+            for dec in getattr(node, "decorator_list", ()):
+                name = (_call_name(dec) if isinstance(dec, ast.Call)
+                        else _dotted(dec))
+                if name in ("jax.jit", "jit") or (
+                        isinstance(dec, ast.Call) and _is_jit_call(dec)):
+                    fn.is_root = True
+        # functions passed (by name) to jit / shard_map become roots
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            is_wrapper = (name in ("jax.jit", "jit")
+                          or _attr_of(name) in [_attr_of(w) for w
+                                                in _SHARD_WRAPPERS])
+            if not is_wrapper:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    for fn in self._by_name.get(arg.id, ()):
+                        fn.is_root = True
+        # call/reference edges
+        for fn in self.fns:
+            for stmt in _own_statements(fn.node):
+                if isinstance(stmt, ast.Call):
+                    callee = _attr_of(_call_name(stmt))
+                    if callee:
+                        fn.calls.add(callee)
+                elif isinstance(stmt, ast.Name):
+                    fn.refs.add(stmt.id)
+
+    def _collect(self, tree) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = _FnInfo(node, node.name)
+                self.fns.append(info)
+                self._by_name.setdefault(node.name, []).append(info)
+
+    def traced(self) -> set:
+        """The set of _FnInfo reachable from any traced root."""
+        reached: set[_FnInfo] = set()
+        frontier = [fn for fn in self.fns if fn.is_root]
+        while frontier:
+            fn = frontier.pop()
+            if fn in reached:
+                continue
+            reached.add(fn)
+            for name in fn.calls | fn.refs:
+                for nxt in self._by_name.get(name, ()):
+                    if nxt not in reached:
+                        frontier.append(nxt)
+        return reached
+
+
+# ----------------------------------------------------------------- rules
+def _noqa_codes(line: str) -> set[str] | None:
+    """Codes suppressed on this line; empty set = bare ``# noqa``."""
+    m = _NOQA.search(line)
+    if not m:
+        return None
+    codes = m.group("codes")
+    if not codes:
+        return set()
+    return {c.strip().upper() for c in codes.split(",") if c.strip()}
+
+
+def _suppressed(lines: list[str], lineno: int, code: str) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    codes = _noqa_codes(lines[lineno - 1])
+    if codes is None:
+        return False
+    return not codes or code in codes
+
+
+def _rule_host_sync(fn: _FnInfo, path: str, lines) -> list[Diagnostic]:
+    out = []
+    for node in _own_statements(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        attr = _call_attr(node)
+        bad = ""
+        if name == "float" and node.args and isinstance(
+                node.args[0], ast.Call):
+            bad = "float(<device value>)"
+        elif attr in ("block_until_ready", "item"):
+            bad = f".{attr}()"
+        elif attr == "asarray" and _root_of(name) in ("np", "numpy"):
+            bad = "np.asarray"
+        if bad and not _suppressed(lines, node.lineno, "FFTB201"):
+            out.append(error(
+                "FFTB201",
+                f"host sync {bad} in {fn.name!r}, which is reachable "
+                "from a traced root",
+                location=f"{path}:{node.lineno}",
+                hint="move the sync outside the jitted/shard_mapped "
+                     "region, or use jnp ops on device values"))
+    return out
+
+
+def _rule_plan_build(fn: _FnInfo, path: str, lines) -> list[Diagnostic]:
+    out = []
+    for node in _own_statements(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        attr = _call_attr(node)
+        if attr in _PLAN_BUILDERS and not _suppressed(
+                lines, node.lineno, "FFTB202"):
+            out.append(error(
+                "FFTB202",
+                f"plan construction {attr}(...) in {fn.name!r}, which "
+                "is reachable from a traced root",
+                location=f"{path}:{node.lineno}",
+                hint="fetch plans eagerly before tracing and close "
+                     "over them (the jit_step eager-fetch pattern)"))
+    return out
+
+
+def _rule_time_time(fn: _FnInfo, path: str, lines) -> list[Diagnostic]:
+    calls: list[int] = []
+    assigned: set[str] = set()
+    subs: list[int] = []
+    stmts = _own_statements(fn.node)
+    for node in stmts:
+        if isinstance(node, ast.Call) and _call_name(node) in (
+                "time.time", "time"):
+            if _call_name(node) == "time.time":
+                calls.append(node.lineno)
+        elif isinstance(node, ast.Assign) and isinstance(
+                node.value, ast.Call) and _call_name(
+                node.value) == "time.time":
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    assigned.add(tgt.id)
+    for node in stmts:
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+            for side in (node.left, node.right):
+                if isinstance(side, ast.Name) and side.id in assigned:
+                    subs.append(node.lineno)
+    flag_line = None
+    if len(calls) >= 2:
+        flag_line = calls[1]
+    elif subs:
+        flag_line = subs[0]
+    if flag_line is None or _suppressed(lines, flag_line, "FFTB203"):
+        return []
+    return [error(
+        "FFTB203",
+        f"time.time() used for interval timing in {fn.name!r}",
+        location=f"{path}:{flag_line}",
+        hint="use time.perf_counter() for intervals; time.time() is "
+             "for epoch stamps only")]
+
+
+_SYNC_MARKERS = frozenset({"block_until_ready", "timed_call", "sync"})
+
+
+def _rule_dispatch_clock(fn: _FnInfo, path: str, lines) -> list[Diagnostic]:
+    pcs: list[int] = []
+    has_compute = False
+    has_sync = False
+    for node in _own_statements(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        attr = _call_attr(node)
+        root = _root_of(name)
+        if name == "time.perf_counter":
+            pcs.append(node.lineno)
+        elif attr in _SYNC_MARKERS:
+            has_sync = True
+        elif name == "float" or (attr == "asarray"
+                                 and root in ("np", "numpy")):
+            has_sync = True               # both materialize to host
+        elif root in ("jax", "jnp", "lax") and attr not in (
+                "jit", "asarray"):
+            has_compute = True
+    if len(pcs) < 2 or not has_compute or has_sync:
+        return []
+    if _suppressed(lines, pcs[-1], "FFTB204"):
+        return []
+    return [error(
+        "FFTB204",
+        f"perf_counter window around device compute in {fn.name!r} "
+        "has no sync before the clock stops",
+        location=f"{path}:{pcs[-1]}",
+        hint="block_until_ready (or obs.timed_call / np.asarray) the "
+             "result inside the window — otherwise the interval "
+             "measures dispatch, not execution")]
+
+
+def _rule_bare_lock(tree: ast.Module, path: str, lines) -> list[Diagnostic]:
+    if not any(s in path for s in _LOCK_SCOPE) or any(
+            s in path for s in _LOCK_EXEMPT):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name in ("threading.Lock", "threading.RLock", "Lock",
+                    "RLock") and not _suppressed(
+                lines, node.lineno, "FFTB205"):
+            out.append(error(
+                "FFTB205",
+                f"bare {name}() on the serving path",
+                location=f"{path}:{node.lineno}",
+                hint="use repro.check.locks.TrackedLock so lock-order "
+                     "checking can see this lock"))
+    return out
+
+
+# ------------------------------------------------------------ entry points
+def lint_source(source: str, path: str = "<string>",
+                extra_roots=()) -> list[Diagnostic]:
+    """Lint one module's source text; returns diagnostics."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as err:
+        return [error("FFTB201", f"cannot parse: {err}",
+                      location=f"{path}:{err.lineno or 0}",
+                      hint="fix the syntax error first")]
+    lines = source.splitlines()
+    index = _ModuleIndex(tree, extra_roots)
+    traced = index.traced()
+    diags: list[Diagnostic] = []
+    for fn in index.fns:
+        if fn in traced:
+            diags.extend(_rule_host_sync(fn, path, lines))
+            diags.extend(_rule_plan_build(fn, path, lines))
+        diags.extend(_rule_time_time(fn, path, lines))
+        diags.extend(_rule_dispatch_clock(fn, path, lines))
+    diags.extend(_rule_bare_lock(tree, path, lines))
+    return sorted(diags, key=lambda d: d.location)
+
+
+def lint_paths(paths, extra_roots=()) -> list[Diagnostic]:
+    """Lint every ``.py`` file under the given files/directories."""
+    files: list[pathlib.Path] = []
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    diags: list[Diagnostic] = []
+    for f in files:
+        rel = f.as_posix()
+        diags.extend(lint_source(f.read_text(), rel, extra_roots))
+    return diags

@@ -25,10 +25,10 @@ replaced under them).
 """
 from __future__ import annotations
 
-import threading
 import time
 from collections import OrderedDict
 
+from ..check.locks import TrackedLock, check_dispatch_hazard
 from ..obs.metrics import global_metrics
 from ..obs.trace import get_tracer
 from .domain import Domain, SphereDomain
@@ -71,7 +71,7 @@ class PlanCache:
         # (n_out, n_in, inverse) -> [refcount, nbytes] over cached plans
         self._table_refs: dict = {}
         self._bytes = 0
-        self._lock = threading.RLock()
+        self._lock = TrackedLock("plan_cache", reentrant=True)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -121,6 +121,9 @@ class PlanCache:
                 tr.instant("plan_cache.hit")
                 return self._data[key][0]
         tr.instant("plan_cache.miss")
+        # builders can take seconds (schedule search, executor traces) —
+        # holding any lock across one is the hazard the checker hunts
+        check_dispatch_hazard("plan_cache.build")
         t0 = time.perf_counter()
         with tr.span("plan_build"):
             plan = builder()

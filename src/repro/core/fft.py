@@ -186,10 +186,18 @@ def plan_for(spec: str, *, domains, grid, out_domains=None, sizes=None,
     key = _plan_cache_key(spec, domains, grid, out_domains=out_domains,
                           sizes=sizes, inverse=inverse, backend=backend,
                           policy=policy)
-    return cache.get_or_build(
-        key, lambda: Transform.parse(spec).build(
+
+    def _build():
+        # coded preflight diagnostics before any plan work — runs on
+        # cache misses only, so the hot (hit) path pays nothing
+        from ..check.preflight import check_transform
+        check_transform(spec, domains=domains, grid=grid, sizes=sizes,
+                        out_domains=out_domains)
+        return Transform.parse(spec).build(
             domains, grid, out_domains=out_domains, sizes=sizes,
-            inverse=inverse, backend=backend, policy=policy))
+            inverse=inverse, backend=backend, policy=policy)
+
+    return cache.get_or_build(key, _build)
 
 
 def apply(spec: str, x, *, domains, grid, out_domains=None, sizes=None,
@@ -234,6 +242,19 @@ def fftb(spec, *args, **kwargs):
     return Transform.parse(spec).build(*args, **kwargs)
 
 
+def _preflight(target, **kwargs):
+    """``fftb.preflight(...)`` — static feasibility diagnostics.
+
+    A spec string routes to the transform checks, a config dict to the
+    basis/service checks; returns the
+    :class:`~repro.check.diagnostics.Diagnostic` list, never raises.
+    Lazy import: ``repro.check.preflight`` depends on ``repro.core``.
+    """
+    from ..check.preflight import preflight
+    return preflight(target, **kwargs)
+
+
 fftb.apply = apply
 fftb.plan_for = plan_for
 fftb.cache = global_plan_cache
+fftb.preflight = _preflight

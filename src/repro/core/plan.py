@@ -142,9 +142,9 @@ class Plan:
         subsequent plain ``plan(x)`` calls use it).
         """
         best, best_t = None, None
-        for pol in candidates:
+        for cand in candidates:
             pol = dataclasses.replace(
-                pol, check_shapes=self.policy.check_shapes)
+                cand, check_shapes=self.policy.check_shapes)
             for _ in range(warmup):
                 jax.block_until_ready(self(x, policy=pol))
             t0 = time.perf_counter()

@@ -40,6 +40,8 @@ from repro.core import (Domain, ProcGrid, cube_spec, fftb,
                         make_stacked_planewave_pair, padded_kinetic_table,
                         planewave_spec, segment_padding_fraction,
                         segment_spheres, sphere_gvectors, sphere_kinetic_row)
+from repro.check.diagnostics import raise_if_errors
+from repro.check.preflight import preflight_basis
 from repro.core.cache import domains_key, grid_key
 from repro.core.policy import ExecPolicy
 
@@ -122,8 +124,6 @@ class PlaneWaveBasis:
                  policy: ExecPolicy | None = None, backend: str = "matmul"):
         self.n = int(n)
         self.d = int(diameter) if diameter is not None else self.n // 2
-        if not 0 < self.d <= self.n:
-            raise ValueError(f"sphere diameter {self.d} not in (0, {n}]")
         self.L = float(L) if L is not None else float(n)
         self.grid = grid if grid is not None else \
             ProcGrid.create([jax.device_count()])
@@ -141,32 +141,21 @@ class PlaneWaveBasis:
             fft_axes = tuple(a for a in range(self.grid.ndim)
                              if a not in self.batch_axes)
         self.fft_axes = tuple(fft_axes)
-        used = self.batch_axes + self.fft_axes
-        if len(set(used)) != len(used) or not self.fft_axes or any(
-                a >= self.grid.ndim or a < 0 for a in used):
-            raise ValueError(
-                f"batch_axes {self.batch_axes} / fft_axes {self.fft_axes} "
-                f"must be disjoint valid axes of {self.grid} with at least "
-                "one fft axis")
+        # coded preflight diagnostics (FFTB110–117) replace the former
+        # ad-hoc ValueErrors; DiagnosticError is a ValueError carrying
+        # the same message substrings, so existing handlers keep working
+        raise_if_errors(preflight_basis(
+            self.n, diameter=self.d, kpts=kpts, nbands=self.nbands,
+            grid=self.grid, batch_axes=self.batch_axes,
+            fft_axes=self.fft_axes, segment_padding=segment_padding))
         self.batch_procs = math.prod(
             self.grid.axis_size(a) for a in self.batch_axes)
         self.fft_procs = math.prod(
             self.grid.axis_size(a) for a in self.fft_axes)
-        if self.nbands % self.batch_procs:
-            raise ValueError(
-                f"nbands {self.nbands} not divisible by the batch-axis "
-                f"size {self.batch_procs} of {self.grid}")
-        if self.d % self.fft_procs or self.n % self.fft_procs:
-            raise ValueError(
-                f"sphere diameter {self.d} and cube width {self.n} must "
-                f"both divide over the fft-axis size {self.fft_procs} "
-                f"of {self.grid}")
         self._pw_spec = planewave_spec(self.batch_axes, self.fft_axes)
         self._cube_spec = cube_spec(self.fft_axes)
 
         self.kpts = np.atleast_2d(np.asarray(kpts, np.float64))
-        if self.kpts.shape[1] != 3:
-            raise ValueError(f"kpts must be (nk, 3), got {self.kpts.shape}")
         nk = self.kpts.shape[0]
         if weights is None:
             self.weights = np.full(nk, 1.0 / nk)

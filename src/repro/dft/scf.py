@@ -290,10 +290,13 @@ def total_energy_stacked(basis, c_pad, rho, v_ext, hartree: HartreeSolver,
     if not isinstance(c_pad, (tuple, list)):
         c_pad = (c_pad,)
     if tables is None:
-        tables = [basis.stacked_band_tables(s) for s in range(len(c_pad))]
+        # eager callers only — the jitted step always passes tables,
+        # fetched at trace time, so this branch never runs under tracing
+        tables = [basis.stacked_band_tables(s)  # noqa: FFTB202
+                  for s in range(len(c_pad))]
     elif not isinstance(tables, (tuple, list)):
         tables = (tables,)
-    occ64 = np.asarray(occ, np.float64)
+    occ64 = np.asarray(occ, np.float64)  # noqa: FFTB201 — host array
     e_kin = jnp.float32(0.0)
     for s, (cs, tab) in enumerate(zip(c_pad, tables)):
         idx = list(basis.segments[s])

@@ -394,7 +394,7 @@ def lower_paper_workload(mesh, *, verbose=True, backend="matmul",
         "bytes_accessed": cost.get("bytes accessed", 0.0),
         "collective_bytes": coll,
         "collective_total": float(sum(coll.values())),
-        "model_comm_bytes": [s for s in plan.comm_stats()],
+        "model_comm_bytes": list(plan.comm_stats()),
         "mem": {"argument": mem.argument_size_in_bytes,
                 "output": mem.output_size_in_bytes,
                 "temp": mem.temp_size_in_bytes},

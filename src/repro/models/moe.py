@@ -82,9 +82,8 @@ def _dispatch_group(xt, p, cfg, C):
     w_of_slot = jnp.zeros((E * C + 1,), w_flat.dtype).at[slot].set(
         w_flat, mode="drop")[:-1]
     contrib = ye * (w_of_slot * valid).astype(ye.dtype)[:, None]
-    out = jnp.zeros((T, D), ye.dtype).at[tok_of_slot].add(
+    return jnp.zeros((T, D), ye.dtype).at[tok_of_slot].add(
         contrib, mode="drop")
-    return out
 
 
 def moe_apply(p, x, cfg, groups: int | None = None):

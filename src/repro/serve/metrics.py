@@ -22,9 +22,9 @@ Thread-safe: dispatch loop and tenant threads record concurrently.
 """
 from __future__ import annotations
 
-import threading
 import time
 
+from repro.check.locks import TrackedLock
 from repro.obs.metrics import Reservoir, percentile
 
 
@@ -50,7 +50,7 @@ class ServiceMetrics:
             raise ValueError("max_samples must be >= 1")
         self._cache = cache
         self.max_samples = int(max_samples)
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("serve.metrics")
         self.reset()
 
     def reset(self) -> None:

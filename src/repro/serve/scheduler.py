@@ -31,6 +31,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.check.locks import TrackedLock
 from repro.core.domain import SphereDomain
 
 
@@ -180,7 +181,7 @@ class CoalescingScheduler:
         self._queues: dict[str, deque] = {}
         self._rr: deque = deque()            # tenant round-robin order
         self._rid = itertools.count()
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("serve.scheduler")
 
     # ---------------------------------------------------------- submission
     def submit(self, request: TransformRequest) -> TransformHandle:

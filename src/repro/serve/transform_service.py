@@ -48,6 +48,9 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.check.diagnostics import raise_if_errors
+from repro.check.locks import TrackedLock, check_dispatch_hazard
+from repro.check.preflight import preflight_request, preflight_service
 from repro.core import Domain, fftb, global_plan_cache, \
     make_stacked_planewave_pair, planewave_spec
 from repro.core.cache import domains_key, grid_key
@@ -97,10 +100,13 @@ class TransformService:
         self.fft_procs = 1
         for a in self.fft_axes:
             self.fft_procs *= grid.axis_size(a)
-        if self.n % self.fft_procs:
-            raise ValueError(
-                f"cube width {self.n} must divide over the fft-axis "
-                f"size {self.fft_procs} of {grid}")
+        # coded preflight diagnostics (FFTB110/113/117/122) replace the
+        # former ad-hoc ValueError; DiagnosticError is a ValueError, so
+        # existing handlers keep working
+        raise_if_errors(preflight_service(
+            self.n, grid=grid, batch_axes=self.batch_axes,
+            fft_axes=self.fft_axes, max_rows=max_rows,
+            padding_budget=padding_budget))
         self.coalesce = bool(coalesce)
         self.warm_async = bool(warm_async)
         self.max_rows = int(max_rows)
@@ -116,7 +122,7 @@ class TransformService:
         register_weak_probe(global_metrics(), "serve", self.metrics)
         self._warmed: set = set()
         self._inflight: set = set()
-        self._warm_lock = threading.Lock()
+        self._warm_lock = TrackedLock("serve.warm")
         self._stopped = False
         self._thread: threading.Thread | None = None
         self._wake = threading.Event()
@@ -134,19 +140,14 @@ class TransformService:
         """
         if self._stopped:
             raise ServiceStopped("service is stopped")
-        if any(e % self.fft_procs for e in sphere.extents):
-            raise ValueError(
-                f"sphere extents {sphere.extents} must divide over the "
-                f"fft-axis size {self.fft_procs} — this cutoff cannot "
-                "shard on the service's grid")
         abs_deadline = (None if deadline is None
                         else time.perf_counter() + float(deadline))
         req = TransformRequest(tenant=tenant, coeffs=coeffs, sphere=sphere,
                                n=self.n, v_eff=v_eff, deadline=abs_deadline)
-        if req.nbands > self.max_rows:
-            raise ValueError(
-                f"request has {req.nbands} bands > max_rows "
-                f"{self.max_rows}; split it")
+        # FFTB111 (unshardable extents) / FFTB122 (bands > max_rows)
+        raise_if_errors(preflight_request(
+            sphere, n=self.n, fft_procs=self.fft_procs,
+            max_rows=self.max_rows, nbands=req.nbands))
         handle = self.scheduler.submit(req)
         self._wake.set()
         return handle
@@ -241,7 +242,7 @@ class TransformService:
         """
         tr = get_tracer()
         resolved = 0
-        for h in self.scheduler.expire():
+        for _h in self.scheduler.expire():
             self.metrics.record_error("deadline")
             resolved += 1
         t0 = time.perf_counter()
@@ -266,6 +267,7 @@ class TransformService:
         return resolved + len(batch)
 
     def _dispatch(self, batch) -> None:
+        check_dispatch_hazard("serve.dispatch")
         tr = get_tracer()
         now = time.perf_counter()
         for h in batch:

@@ -1,0 +1,241 @@
+"""Preflight diagnostics: golden findings for known-bad configurations.
+
+Every check fires on a configuration a real session has hit (indivisible
+extents, nk that will not stack, an over-tight cache budget), carries a
+stable FFTB1xx code, and the library boundary surfaces it as a
+``DiagnosticError`` whose message keeps the historical substrings.
+"""
+import numpy as np
+import pytest
+
+from repro.check import CODES, Diagnostic, DiagnosticError, render_diagnostics
+from repro.check.diagnostics import error, raise_if_errors, warning
+from repro.check.preflight import (preflight, preflight_basis,
+                                   preflight_config, preflight_request,
+                                   preflight_service, preflight_transform)
+from repro.core import ProcGrid, fftb
+from repro.core.domain import Domain
+from repro.core.planewave import kpoint_sphere
+
+
+def codes(diags):
+    return [d.code for d in diags]
+
+
+# ------------------------------------------------------------- Diagnostic
+def test_diagnostic_requires_registered_code():
+    with pytest.raises(ValueError, match="unregistered"):
+        Diagnostic("FFTB999", "error", "nope")
+    with pytest.raises(ValueError, match="severity"):
+        Diagnostic("FFTB110", "fatal", "nope")
+
+
+def test_diagnostic_render_and_sort():
+    e = error("FFTB110", "bad width", location="n", hint="pad it")
+    w = warning("FFTB114", "will not stack")
+    assert e.render() == "n: FFTB110 error: bad width  [pad it]"
+    # errors render before warnings regardless of input order
+    text = render_diagnostics([w, e])
+    assert text.splitlines()[0].startswith("n: FFTB110")
+
+
+def test_diagnostic_error_is_value_error_with_codes():
+    e1 = error("FFTB110", "cube width 15 must divide over the fft-axis")
+    e2 = error("FFTB112", "nbands 3 not divisible by the batch-axis size 4")
+    err = DiagnosticError([e1, e2])
+    assert isinstance(err, ValueError)
+    assert err.code == "FFTB110"
+    assert "[FFTB110]" in str(err) and "[FFTB112]" in str(err)
+    # the historical substring survives inside the coded message
+    assert "nbands 3 not divisible" in str(err)
+
+
+def test_raise_if_errors_passes_warnings_through():
+    w = warning("FFTB114", "informational")
+    assert raise_if_errors([w]) == [w]
+    with pytest.raises(DiagnosticError):
+        raise_if_errors([w, error("FFTB116", "boom")])
+
+
+def test_every_emitted_code_is_registered():
+    assert all(c.startswith("FFTB") for c in CODES)
+    # the README/CLI table covers all three analyzer families
+    assert {"FFTB101", "FFTB201", "FFTB301"} <= set(CODES)
+
+
+# ------------------------------------------------------ transform preflight
+def test_transform_spec_parse_error_is_fftb101():
+    assert codes(preflight_transform("x y z")) == ["FFTB101"]
+    assert codes(preflight_transform("x -> x")) == ["FFTB101"]
+
+
+def test_transform_grid_axis_out_of_range_is_fftb102():
+    g = ProcGrid.create_abstract([2])
+    diags = preflight_transform("x{1} y -> X{1} Y", grid=g)
+    assert codes(diags) == ["FFTB102", "FFTB102"]   # input and output side
+    assert "grid has 1 axes" in diags[0].message
+
+
+def test_transform_rank_mismatch_is_fftb103():
+    g = ProcGrid.create_abstract([2])
+    dom = kpoint_sphere(8)
+    diags = preflight_transform("x y -> X Y", domains=dom, grid=g)
+    assert codes(diags) == ["FFTB103"]
+
+
+def test_transform_indivisible_extent_is_fftb110():
+    g = ProcGrid.create_abstract([2])
+    dom = Domain((0, 0, 0), (14, 14, 14))
+    assert dom.extents == (15, 15, 15)
+    diags = preflight_transform("x{0} y z -> X Y Z{0}", domains=dom, grid=g)
+    assert codes(diags) == ["FFTB110", "FFTB110"]
+    assert "divide over" in diags[0].message
+
+
+def test_transform_sphere_extent_is_fftb111():
+    g = ProcGrid.create_abstract([2])
+    sph = kpoint_sphere(7)                       # odd bounding box
+    diags = preflight_transform("x{0} y z -> X Y Z{0}", domains=sph,
+                                grid=g, sizes=(16, 16, 16))
+    assert "FFTB111" in codes(diags)
+
+
+def test_transform_clean_spec_has_no_findings():
+    g = ProcGrid.create_abstract([2])
+    dom = kpoint_sphere(16)
+    assert preflight_transform("x{0} y z -> X Y Z{0}", domains=dom,
+                               grid=g) == []
+
+
+# ---------------------------------------------------------- basis preflight
+def test_basis_indivisible_extents_golden():
+    # 2x2 grid: batch axis 2, fft axis 2.  n=15 and d=7 both indivisible,
+    # nbands=3 does not split over the batch axis.
+    diags = preflight_basis(15, diameter=7, nbands=3, grid_shape=(2, 2))
+    assert codes(diags) == ["FFTB112", "FFTB110", "FFTB111"]
+    by_code = {d.code: d for d in diags}
+    assert "nbands 3 not divisible" in by_code["FFTB112"].message
+    assert "divide over the fft-axis" in by_code["FFTB110"].message
+    assert by_code["FFTB111"].hint
+
+
+def test_basis_bad_axes_is_fftb113():
+    diags = preflight_basis(16, grid_shape=(2, 2), batch_axes=(0, 1))
+    assert codes(diags) == ["FFTB113"]
+    assert "must be disjoint" in diags[0].message
+
+
+def test_basis_diameter_out_of_range_is_fftb116():
+    assert "FFTB116" in codes(preflight_basis(16, diameter=0))
+    assert "FFTB116" in codes(preflight_basis(16, diameter=17))
+
+
+def test_basis_deep_nk_does_not_stack_warns_fftb114():
+    # nk=3 over batch size 2 without segments: stacked route falls back
+    diags = preflight_basis(
+        16, diameter=8, nbands=2, grid_shape=(2, 2),
+        kpts=[(0, 0, 0), (0.1, 0, 0), (0.2, 0, 0)], deep=True)
+    assert codes(diags) == ["FFTB114"]
+    assert not diags[0].is_error
+
+
+def test_basis_deep_segmented_stacking_is_clean():
+    diags = preflight_basis(
+        16, diameter=8, nbands=2, grid_shape=(2, 2),
+        kpts=[(0, 0, 0), (0.1, 0, 0), (0.2, 0, 0), (0.3, 0, 0)],
+        segment_padding=0.5, deep=True)
+    assert diags == []
+
+
+def test_basis_deep_over_budget_cache_is_fftb130():
+    diags = preflight_basis(16, diameter=8, nbands=2, grid_shape=(1,),
+                            cache_max_bytes=1024, deep=True)
+    assert codes(diags) == ["FFTB130"]
+    assert "byte budget 1024" in diags[0].message
+
+
+def test_basis_bad_segment_padding_is_fftb117():
+    assert "FFTB117" in codes(
+        preflight_basis(16, diameter=8, segment_padding=1.5))
+
+
+# -------------------------------------------------------- service preflight
+def test_service_indivisible_cube_and_diameters():
+    diags = preflight_service(15, grid_shape=(4,), diameters=(6, 20))
+    assert codes(diags) == ["FFTB110", "FFTB111", "FFTB116"]
+
+
+def test_service_request_golden():
+    sph = kpoint_sphere(6)
+    diags = preflight_request(sph, n=16, fft_procs=4, max_rows=2, nbands=5)
+    assert codes(diags) == ["FFTB111", "FFTB122"]
+    assert "cannot shard" in diags[0].message
+    assert "split it" in diags[1].message
+
+
+def test_service_request_coeff_contracts():
+    sph = kpoint_sphere(8)
+    bad_shape = np.zeros((2, 3), np.complex64)
+    diags = preflight_request(sph, n=16, fft_procs=1, coeffs=bad_shape)
+    assert "FFTB120" in codes(diags)
+    bad_dtype = np.zeros((2, sph.npacked), np.float32)
+    diags = preflight_request(sph, n=16, fft_procs=1, coeffs=bad_dtype)
+    assert "FFTB121" in codes(diags)
+
+
+# ----------------------------------------------------------- umbrella entry
+def test_fftb_preflight_routes_spec_and_config():
+    g = ProcGrid.create_abstract([2])
+    assert codes(fftb.preflight("x y z", grid=g)) == ["FFTB101"]
+    diags = fftb.preflight({"n": 15, "diameter": 7, "nbands": 3},
+                           name="bad-scf", grid_shape=(2, 2))
+    assert set(codes(diags)) == {"FFTB112", "FFTB110", "FFTB111"}
+    assert all(d.location.startswith("bad-scf") for d in diags)
+    with pytest.raises(TypeError, match="arrow-spec string or a config"):
+        fftb.preflight(42)
+
+
+def test_preflight_config_serve_scenario():
+    cfg = {"n": 16, "d": 8, "d_small": 4, "tenants": 3, "max_rows": 8,
+           "padding_budget": 0.5}
+    assert preflight_config(cfg, name="serve", grid_shape=(4,)) == []
+    cfg_bad = dict(cfg, d_small=3)
+    diags = preflight_config(cfg_bad, name="serve", grid_shape=(4,))
+    assert codes(diags) == ["FFTB111"]
+
+
+def test_baseline_scenarios_self_audit_clean():
+    """The shipped benchmark scenarios must pass their own preflight."""
+    import json
+    import pathlib
+
+    from repro.check.preflight import preflight_scenario
+    path = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+        "baseline.json"
+    records = json.loads(path.read_text())["scenarios"]
+    for name, record in records.items():
+        diags = preflight_scenario(name, record)
+        assert not any(d.is_error for d in diags), \
+            f"{name}: {render_diagnostics(diags)}"
+
+
+# ------------------------------------------------- library boundary raising
+def test_plan_for_raises_coded_diagnostic():
+    from repro.core.domain import Domain
+    g = ProcGrid.create_abstract([2])
+    dom = Domain((0, 0, 0), (14, 14, 14))
+    with pytest.raises(DiagnosticError) as exc:
+        fftb.plan_for("x{0} y z -> X Y Z{0}", domains=dom, grid=g)
+    assert exc.value.code == "FFTB110"
+    # and it is still a ValueError for legacy handlers
+    with pytest.raises(ValueError, match="divide over"):
+        fftb.plan_for("x{0} y z -> X Y Z{0}", domains=dom, grid=g)
+
+
+def test_basis_raises_coded_diagnostic():
+    from repro.dft import PlaneWaveBasis
+    g2 = ProcGrid.create_abstract([2, 2])
+    with pytest.raises(DiagnosticError) as exc:
+        PlaneWaveBasis(16, diameter=8, nbands=3, grid=g2)
+    assert exc.value.code == "FFTB112"
+    assert "nbands 3 not divisible" in str(exc.value)

@@ -1,0 +1,244 @@
+"""Seeded-violation fixtures for every repo-invariant lint rule.
+
+Each rule gets a minimal source string that *must* trip it (the seeded
+violation), a close sibling that must *not* (the rule's precision), and a
+``# noqa: FFTB2xx`` escape hatch.  Plus the meta-test: the shipped tree
+itself lints clean.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from repro.check.lint import lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+def codes(diags):
+    return [d.code for d in diags]
+
+
+def lint(src, **kw):
+    return lint_source(textwrap.dedent(src), "mod.py", **kw)
+
+
+# -------------------------------------------------- FFTB201 host sync
+def test_host_sync_under_jit_decorator():
+    diags = lint("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            y = x * 2
+            return float(jax.numpy.sum(y))
+    """)
+    assert codes(diags) == ["FFTB201"]
+    assert "host sync" in diags[0].message
+    assert diags[0].location.startswith("mod.py:")
+
+
+def test_host_sync_reachable_through_helper():
+    # the sync lives in a helper the jitted root calls — reachability
+    diags = lint("""
+        import jax
+
+        def _inner(y):
+            return y.block_until_ready()
+
+        @jax.jit
+        def step(x):
+            return _inner(x * 2)
+    """)
+    assert codes(diags) == ["FFTB201"]
+    assert "_inner" in diags[0].message
+
+
+def test_host_sync_outside_traced_code_is_fine():
+    assert lint("""
+        def eager_report(x):
+            return float(sum_of(x))
+    """) == []
+
+
+def test_host_sync_known_traced_root_names():
+    # jit_step is a cross-module traced root even without a decorator
+    diags = lint("""
+        import numpy as np
+
+        def jit_step(state):
+            return np.asarray(state.rho)
+    """)
+    assert codes(diags) == ["FFTB201"]
+
+
+def test_host_sync_noqa_suppresses():
+    assert lint("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            return float(host_only(x))  # noqa: FFTB201
+    """) == []
+
+
+# ------------------------------------------------ FFTB202 plan builds
+def test_plan_build_under_tracing():
+    diags = lint("""
+        def _execute_traced(basis, s):
+            plans = basis.stacked_hamiltonian_plans(s)
+            return plans
+    """)
+    assert codes(diags) == ["FFTB202"]
+    assert "stacked_hamiltonian_plans" in diags[0].message
+
+
+def test_plan_build_passed_by_name_to_jit():
+    diags = lint("""
+        import jax
+
+        def body(carry):
+            return cache.get_or_build(key, build)
+
+        run = jax.jit(body)
+    """)
+    assert codes(diags) == ["FFTB202"]
+
+
+def test_plan_build_eager_fetch_is_fine():
+    assert lint("""
+        def make_step(basis, s):
+            plans = basis.stacked_hamiltonian_plans(s)   # eager: at trace
+            def jit_step(x):
+                return plans[0](x)
+            return jit_step
+    """) == []
+
+
+# ------------------------------------------------ FFTB203 honest clock
+def test_time_time_interval():
+    diags = lint("""
+        import time
+
+        def bench(f):
+            t0 = time.time()
+            f()
+            return time.time() - t0
+    """)
+    assert codes(diags) == ["FFTB203"]
+    assert "perf_counter" in diags[0].hint
+
+
+def test_time_time_epoch_stamp_is_fine():
+    assert lint("""
+        import time
+
+        def checkpoint_meta():
+            return {"saved_at": time.time()}
+    """) == []
+
+
+# ------------------------------------------- FFTB204 unsynced window
+def test_perf_counter_window_without_sync():
+    diags = lint("""
+        import time
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jnp.fft.fftn(x)
+            return time.perf_counter() - t0
+    """)
+    assert codes(diags) == ["FFTB204"]
+    assert "measures dispatch" in diags[0].hint
+
+
+def test_perf_counter_window_with_sync_is_fine():
+    assert lint("""
+        import time
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jnp.fft.fftn(x).block_until_ready()
+            return time.perf_counter() - t0
+    """) == []
+
+
+def test_perf_counter_window_float_materializes():
+    # float(...) pulls to host — counts as the sync (trainer.py pattern)
+    assert lint("""
+        import time
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            loss = float(jnp.sum(x))
+            return time.perf_counter() - t0
+    """) == []
+
+
+# ---------------------------------------------- FFTB205 bare locks
+def test_bare_lock_on_serving_path():
+    src = """
+        import threading
+
+        class Scheduler:
+            def __init__(self):
+                self._lock = threading.Lock()
+    """
+    diags = lint_source(textwrap.dedent(src), "src/repro/serve/sched.py")
+    assert codes(diags) == ["FFTB205"]
+    assert "TrackedLock" in diags[0].hint
+
+
+def test_bare_lock_elsewhere_is_fine():
+    src = """
+        import threading
+        lock = threading.RLock()
+    """
+    assert lint_source(textwrap.dedent(src), "src/repro/obs/metrics.py") == []
+
+
+def test_bare_lock_locks_module_exempt():
+    src = "import threading\n_graph = threading.Lock()\n"
+    assert lint_source(src, "src/repro/check/locks.py") == []
+
+
+# -------------------------------------------------------- meta checks
+def test_syntax_error_is_reported_not_raised():
+    diags = lint_source("def broken(:\n", "bad.py")
+    assert codes(diags) == ["FFTB201"]
+    assert "cannot parse" in diags[0].message
+
+
+def test_extra_roots_extend_reachability():
+    src = """
+        def my_kernel(x):
+            return x.item()
+    """
+    assert lint(src) == []
+    assert codes(lint(src, extra_roots=("my_kernel",))) == ["FFTB201"]
+
+
+def test_shipped_tree_lints_clean():
+    """The invariant the CI job gates on: src/ has zero lint errors."""
+    diags = lint_paths([REPO / "src"])
+    errors = [d for d in diags if d.is_error]
+    assert not errors, "\n".join(d.render() for d in errors)
+
+
+def test_cli_lint_and_codes_subcommands():
+    env_src = str(REPO / "src")
+    env = {**os.environ, "PYTHONPATH": env_src}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.check", "lint", env_src],
+        capture_output=True, text=True, env=env, check=False)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 error(s)" in out.stdout
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.check", "codes"],
+        capture_output=True, text=True, env=env, check=False)
+    assert out.returncode == 0
+    assert "FFTB301" in out.stdout

@@ -1,0 +1,146 @@
+"""Seeded hazards for the runtime lock-order checker.
+
+A two-lock ordering cycle (FFTB301) and a lock-held-across-dispatch
+hazard (FFTB302) must each be caught at the moment they are created —
+no actual deadlock required — and the whole machinery must cost nothing
+when disabled.
+"""
+import threading
+
+import pytest
+
+from repro.check import (LockOrderError, TrackedLock, check_dispatch_hazard,
+                         disable_lock_checking, enable_lock_checking,
+                         lock_violations)
+
+
+@pytest.fixture(autouse=True)
+def _clean_monitor():
+    disable_lock_checking()
+    yield
+    disable_lock_checking()
+
+
+def test_disabled_is_a_plain_lock():
+    lk = TrackedLock("a")
+    assert not lk.locked()
+    with lk:
+        assert lk.locked()
+    assert lk.acquire(blocking=False)
+    lk.release()
+    check_dispatch_hazard("anywhere")           # free no-op
+    assert lock_violations() == []
+
+
+def test_lock_order_cycle_detected_fftb301():
+    enable_lock_checking(mode="raise")
+    a, b = TrackedLock("a"), TrackedLock("b")
+    with a:
+        with b:                                  # edge a -> b
+            pass
+    # the reversed order closes the cycle the moment b is entered first
+    with pytest.raises(LockOrderError) as exc, b:
+        a.acquire()
+    assert exc.value.diagnostic.code == "FFTB301"
+    assert "a" in exc.value.diagnostic.message
+    # the failed acquire must not leave 'a' on the held stack
+    with a:
+        pass
+
+
+def test_lock_order_cycle_across_threads():
+    enable_lock_checking(mode="record")
+    x, y = TrackedLock("x"), TrackedLock("y")
+
+    def t1():
+        with x, y:
+            pass
+
+    def t2():
+        with y, x:
+            pass
+
+    th1 = threading.Thread(target=t1)
+    th1.start()
+    th1.join(timeout=10)
+    th2 = threading.Thread(target=t2)
+    th2.start()
+    th2.join(timeout=10)
+    viol = lock_violations()
+    assert [d.code for d in viol] == ["FFTB301"]
+    assert "lock-order cycle" in viol[0].message
+
+
+def test_record_mode_does_not_raise():
+    enable_lock_checking(mode="record")
+    a, b = TrackedLock("p"), TrackedLock("q")
+    with a, b:
+        pass
+    with b:
+        with a:                                  # cycle, but only recorded
+            pass
+    assert [d.code for d in lock_violations()] == ["FFTB301"]
+
+
+def test_dispatch_hazard_fftb302():
+    enable_lock_checking(mode="raise")
+    lk = TrackedLock("serve.metrics")
+    with pytest.raises(LockOrderError) as exc, lk:
+        check_dispatch_hazard("plan_cache.build")
+    assert exc.value.diagnostic.code == "FFTB302"
+    assert "plan_cache.build" in exc.value.diagnostic.message
+    # outside the lock the same site is fine
+    check_dispatch_hazard("plan_cache.build")
+
+
+def test_reentrant_lock_no_false_cycle():
+    enable_lock_checking(mode="raise")
+    lk = TrackedLock("cache", reentrant=True)
+    with lk:
+        with lk:                                 # re-entry: no new edge
+            assert lk.locked()
+    assert not lk.locked()
+    assert lock_violations() == []
+
+
+def test_same_order_many_threads_is_clean():
+    enable_lock_checking(mode="record")
+    outer, inner = TrackedLock("outer"), TrackedLock("inner")
+
+    def worker():
+        for _ in range(50):
+            with outer, inner:
+                pass
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert lock_violations() == []
+
+
+def test_plan_cache_build_runs_outside_its_lock():
+    """The integration the checker exists for: PlanCache must never hold
+    its lock across a plan build."""
+    from repro.core import PlanCache
+    enable_lock_checking(mode="raise")
+    cache = PlanCache(maxsize=4)
+
+    class _P:
+        def estimated_bytes(self):
+            return 64
+
+        def shared_table_bytes(self):
+            return {}
+
+    # get_or_build calls check_dispatch_hazard before the builder; a
+    # lock-holding build would raise FFTB302 here
+    assert cache.get_or_build("k", _P) is cache.peek("k")
+
+
+def test_service_locks_are_tracked():
+    from repro.serve.metrics import ServiceMetrics
+    from repro.serve.scheduler import CoalescingScheduler
+    assert isinstance(CoalescingScheduler()._lock, TrackedLock)
+    assert isinstance(ServiceMetrics()._lock, TrackedLock)

@@ -5,33 +5,38 @@ import pytest
 from repro.configs.base import ARCH_IDS, SHAPES, all_configs, get_config
 
 EXACT = {
-    "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv=8,
-                      d_ff=25600, vocab=151936, qk_norm=True,
-                      family="dense"),
-    "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32, n_kv=4,
-                           d_ff=5632, vocab=32000, family="dense"),
-    "nemotron-4-340b": dict(n_layers=96, d_model=18432, n_heads=96, n_kv=8,
-                            d_ff=73728, vocab=256000, activation="relu2",
-                            family="dense"),
-    "granite-3-2b": dict(n_layers=40, d_model=2048, n_heads=32, n_kv=8,
-                         d_ff=8192, vocab=49155, family="dense"),
-    "pixtral-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv=8,
-                        d_ff=14336, vocab=131072, family="vlm"),
-    "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
-                                 n_kv=8, d_ff=512, vocab=49155,
-                                 n_experts=40, top_k=8, family="moe"),
-    "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48, n_kv=8,
-                      d_ff=10752, vocab=100352, n_experts=16, top_k=4,
-                      family="moe"),
-    "whisper-small": dict(n_layers=12, d_model=768, n_heads=12, n_kv=12,
-                          d_ff=3072, vocab=51865, enc_layers=12,
-                          enc_seq=1500, family="encdec"),
-    "recurrentgemma-9b": dict(n_layers=38, d_model=4096, n_heads=16,
-                              n_kv=1, d_ff=12288, vocab=256000,
-                              local_window=2048, family="hybrid",
-                              block_pattern=("rec", "rec", "attn")),
-    "mamba2-370m": dict(n_layers=48, d_model=1024, d_ff=0, vocab=50280,
-                        ssm_state=128, family="ssm"),
+    "qwen3-32b": {"n_layers": 64, "d_model": 5120, "n_heads": 64,
+                  "n_kv": 8, "d_ff": 25600, "vocab": 151936,
+                  "qk_norm": True, "family": "dense"},
+    "tinyllama-1.1b": {"n_layers": 22, "d_model": 2048, "n_heads": 32,
+                       "n_kv": 4, "d_ff": 5632, "vocab": 32000,
+                       "family": "dense"},
+    "nemotron-4-340b": {"n_layers": 96, "d_model": 18432, "n_heads": 96,
+                        "n_kv": 8, "d_ff": 73728, "vocab": 256000,
+                        "activation": "relu2", "family": "dense"},
+    "granite-3-2b": {"n_layers": 40, "d_model": 2048, "n_heads": 32,
+                     "n_kv": 8, "d_ff": 8192, "vocab": 49155,
+                     "family": "dense"},
+    "pixtral-12b": {"n_layers": 40, "d_model": 5120, "n_heads": 32,
+                    "n_kv": 8, "d_ff": 14336, "vocab": 131072,
+                    "family": "vlm"},
+    "granite-moe-3b-a800m": {"n_layers": 32, "d_model": 1536,
+                             "n_heads": 24, "n_kv": 8, "d_ff": 512,
+                             "vocab": 49155, "n_experts": 40, "top_k": 8,
+                             "family": "moe"},
+    "dbrx-132b": {"n_layers": 40, "d_model": 6144, "n_heads": 48,
+                  "n_kv": 8, "d_ff": 10752, "vocab": 100352,
+                  "n_experts": 16, "top_k": 4, "family": "moe"},
+    "whisper-small": {"n_layers": 12, "d_model": 768, "n_heads": 12,
+                      "n_kv": 12, "d_ff": 3072, "vocab": 51865,
+                      "enc_layers": 12, "enc_seq": 1500,
+                      "family": "encdec"},
+    "recurrentgemma-9b": {"n_layers": 38, "d_model": 4096, "n_heads": 16,
+                          "n_kv": 1, "d_ff": 12288, "vocab": 256000,
+                          "local_window": 2048, "family": "hybrid",
+                          "block_pattern": ("rec", "rec", "attn")},
+    "mamba2-370m": {"n_layers": 48, "d_model": 1024, "d_ff": 0,
+                    "vocab": 50280, "ssm_state": 128, "family": "ssm"},
 }
 
 

@@ -274,7 +274,8 @@ def test_pipelined_band_update_matches_serial_to_1e10(basis2):
 def test_scf_pipeline_flag_equivalent(basis2):
     """run_scf(pipeline=True) ≡ run_scf(pipeline=False), energy and ρ."""
     g1 = basis2.grid
-    cfg = dict(n=16, nbands=3, kpts=KPTS2, max_iter=6, mix_warmup=99)
+    cfg = {"n": 16, "nbands": 3, "kpts": KPTS2, "max_iter": 6,
+           "mix_warmup": 99}
     a = run_scf(SCFConfig(**cfg, pipeline=True), grid=g1)
     b = run_scf(SCFConfig(**cfg, pipeline=False), grid=g1)
     assert a.transforms == b.transforms
@@ -535,8 +536,8 @@ def test_scf_jit_step_matches_eager_and_dispatches_only_at_trace(basis2):
     6-iteration runs (trace-time only) with zero per-k linalg calls."""
     from repro.dft import hamiltonian as H
     g1 = basis2.grid
-    cfg = dict(n=16, nbands=3, kpts=KPTS2, max_iter=6, mix_warmup=99,
-               mix_history=1)
+    cfg = {"n": 16, "nbands": 3, "kpts": KPTS2, "max_iter": 6,
+           "mix_warmup": 99, "mix_history": 1}
     eager = run_scf(SCFConfig(**cfg, stack_k=True), grid=g1)
     ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
     jit6 = run_scf(SCFConfig(**cfg, stack_k=True, jit_step=True), grid=g1)
@@ -578,7 +579,8 @@ def test_scf_stack_k_flag_equivalent(basis2):
     stacked H sweeps changes dispatch, not results — the pipelined path
     stays available as the equivalence oracle."""
     g1 = basis2.grid
-    cfg = dict(n=16, nbands=3, kpts=KPTS2, max_iter=6, mix_warmup=99)
+    cfg = {"n": 16, "nbands": 3, "kpts": KPTS2, "max_iter": 6,
+           "mix_warmup": 99}
     a = run_scf(SCFConfig(**cfg, stack_k=True), grid=g1)
     b = run_scf(SCFConfig(**cfg, stack_k=False), grid=g1)
     assert a.stacked and not b.stacked

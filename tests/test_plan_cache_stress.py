@@ -7,10 +7,23 @@ churn, and hits + misses account for every lookup.
 """
 import threading
 
+import pytest
+
+from repro.check import disable_lock_checking, enable_lock_checking
 from repro.core import PlanCache
 
 N_THREADS = 8
 M_KEYS = 12
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_checking():
+    """Every stress test runs with the lock-order checker armed: an
+    ordering cycle or a build dispatched under the cache lock raises
+    ``LockOrderError`` inside a worker and fails the test."""
+    enable_lock_checking(mode="raise")
+    yield
+    disable_lock_checking()
 
 
 class _FakePlan:
@@ -33,7 +46,7 @@ def _hammer(cache, keys, rounds, results, barrier, builds):
     def worker(tid):
         barrier.wait(timeout=30)
         got = {}
-        for r in range(rounds):
+        for _ in range(rounds):
             for k in keys:
                 def build(k=k):
                     builds.append(k)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.core import SphereDomain, fft_conv, local_dft
 from repro.data.pipeline import DataConfig, Pipeline
 
-SET = dict(max_examples=20, deadline=None)
+SET = {"max_examples": 20, "deadline": None}
 
 
 def _cx(seed, shape):
@@ -113,7 +113,7 @@ def test_compression_error_feedback_unbiased(seed):
     g_sum = np.zeros((16,), np.float32)
     q_sum = np.zeros((16,), np.float32)
     res = init_residuals({"g": jnp.zeros((16,))})
-    for t in range(8):
+    for _ in range(8):
         g = rng.standard_normal(16).astype(np.float32)
         comp, res = compress_grads({"g": jnp.asarray(g)}, res)
         dq = np.asarray(decompress_grads(comp)["g"])
