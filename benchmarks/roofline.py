@@ -140,6 +140,84 @@ def analyse_trace(trace: dict) -> dict:
     }
 
 
+def _bytes_accessed(jitted, *args) -> float | None:
+    """'bytes accessed' from XLA's cost analysis, None when unavailable.
+
+    CPU/interpret builds sometimes return no analysis (or a list per
+    computation); treat every failure as "measured unavailable" so the
+    report degrades to modeled-only instead of crashing.
+    """
+    try:
+        cost = jitted.lower(*args).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else None
+        if not cost:
+            return None
+        val = cost.get("bytes accessed")
+        return float(val) if val is not None else None
+    except Exception:
+        return None
+
+
+def analyse_sphere_kernels(n: int = 16, d: int = 8, nk: int = 2,
+                           nbands: int = 4):
+    """Measured-vs-modeled bytes for the fused sphere-pack kernels.
+
+    Compares the composed hot-path legs (``unpack`` + plan / plan +
+    ``pack``) against the fused pallas routes
+    (``unpack_transform``/``transform_pack``) on a 1-device grid.  The
+    byte model counts the packed operands and the first/last-stage slab
+    once each; the composed route additionally writes the zero-padded
+    (B, d³) bounding cube and reads it back for the line-DFT GEMM —
+    16·B·d³ modeled bytes per direction that the fused kernels never
+    touch (the two saved cube materializations).  Measured numbers come
+    from XLA's ``cost_analysis`` when the backend provides one.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import (ProcGrid, kpoint_sphere,
+                            make_stacked_planewave_pair)
+
+    grid = ProcGrid.create([1])
+    kpts = ((0.0, 0.0, 0.0), (0.5, 0.5, 0.5), (0.0, 0.5, 0.0))
+    spheres = [kpoint_sphere(d, kp) for kp in kpts[:nk]]
+    inv, fwd = make_stacked_planewave_pair(grid, n, spheres, nbands,
+                                           backend="pallas")
+    B = nk * nbands
+    npm = inv.npacked_max
+    rng = np.random.default_rng(0)
+    packed = jnp.asarray(
+        (rng.standard_normal((B, npm))
+         + 1j * rng.standard_normal((B, npm))).astype(np.complex64))
+    cube = inv(inv.unpack(packed))
+
+    slab = 8.0 * B * d * d * n          # first/last-stage (B, d, d, n)
+    pack_io = 8.0 * B * npm             # packed lanes, complex64
+    cube_rw = 16.0 * B * d ** 3         # cube write + GEMM read-back
+    rows = []
+    for name, composed, fused, x in (
+            ("unpack_dft",
+             jax.jit(lambda p: inv(inv.unpack(p))),
+             jax.jit(inv.unpack_transform), packed),
+            ("dft_pack",
+             jax.jit(lambda c: fwd.pack(fwd(c))),
+             jax.jit(fwd.transform_pack), cube)):
+        m_comp = _bytes_accessed(composed, x)
+        m_fus = _bytes_accessed(fused, x)
+        rows.append({
+            "kernel": name,
+            "modeled_composed_bytes": pack_io + slab + cube_rw,
+            "modeled_fused_bytes": pack_io + slab,
+            "modeled_saved_bytes": cube_rw,
+            "measured_composed_bytes": m_comp,
+            "measured_fused_bytes": m_fus,
+            "measured_saved_bytes": (m_comp - m_fus)
+            if m_comp is not None and m_fus is not None else None,
+        })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single",
@@ -148,7 +226,29 @@ def main(argv=None):
     ap.add_argument("--trace", default="", metavar="FILE",
                     help="analyse a Chrome-trace JSON from the repro.obs "
                          "tracer instead of the dry-run artifacts")
+    ap.add_argument("--sphere-kernels", action="store_true",
+                    help="report measured-vs-modeled bytes for the fused "
+                         "sphere-pack pallas kernels against the composed "
+                         "unpack/plan/pack route")
     args = ap.parse_args(argv)
+    if args.sphere_kernels:
+        rows = analyse_sphere_kernels()
+        print(f"{'kernel':12s} {'route':9s} {'modeled_MiB':>12s} "
+              f"{'measured_MiB':>13s}")
+        for r in rows:
+            for route in ("composed", "fused"):
+                meas = r[f"measured_{route}_bytes"]
+                print(f"{r['kernel']:12s} {route:9s} "
+                      f"{r[f'modeled_{route}_bytes'] / 2 ** 20:12.3f} "
+                      + (f"{meas / 2 ** 20:13.3f}" if meas is not None
+                         else f"{'n/a':>13s}"))
+            saved = r["measured_saved_bytes"]
+            print(f"{'':12s} {'saved':9s} "
+                  f"{r['modeled_saved_bytes'] / 2 ** 20:12.3f} "
+                  + (f"{saved / 2 ** 20:13.3f}" if saved is not None
+                     else f"{'n/a':>13s}")
+                  + "   (bounding-cube write + read the fusion skips)")
+        return rows
     if args.trace:
         with open(args.trace) as f:
             rep = analyse_trace(json.load(f))

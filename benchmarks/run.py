@@ -41,7 +41,8 @@ fails on baseline scenarios missing from the current run, so the merged
 artifact is what gets compared).
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
-         [--scenarios scf,scf-2d,scf-stacked,scf-jit,scf-3d | gate]
+         [--scenarios scf,scf-2d,scf-stacked,scf-jit,scf-pallas,scf-3d
+          | gate]
          [--merge] [--baseline PATH] [--trace-out PATH]
 """
 from __future__ import annotations
@@ -58,7 +59,8 @@ import numpy as np
 #: the literal ``gate`` resolves to whatever the baseline gates)
 SCENARIOS = ("table1", "plan_cache", "local_fft", "planewave", "fig9",
              "serve-transform",
-             "scf", "scf-2d", "scf-stacked", "scf-jit", "scf-3d", "steps")
+             "scf", "scf-2d", "scf-stacked", "scf-jit", "scf-3d",
+             "scf-pallas", "steps")
 
 
 def _timeit(fn, *args, warmup=2, iters=5):
@@ -259,7 +261,8 @@ def bench_fig9(rows):
 
 
 def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
-              stack_k=None, jit_step=False, segment_padding=None):
+              stack_k=None, jit_step=False, segment_padding=None,
+              backend=None):
     """repro.dft SCF scenario — the paper's end-to-end workload.
 
     Two k-points (two distinct sphere plans) + the full-cube Hartree pair,
@@ -273,7 +276,11 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
     ``jit_step`` additionally fuses each outer iteration into one
     jit-compiled step (``scf-jit``); ``segment_padding`` caps per-segment
     realized padding so the stacked batch splits into segments instead of
-    padding every k to the global max (``scf-3d``).  Returns the
+    padding every k to the global max (``scf-3d``); ``backend`` pins the
+    line-DFT backend — ``"pallas"`` routes the Hamiltonian hot path
+    through the fused sphere-pack kernels (``scf-pallas``), and the
+    *resolved* backend lands in the scenario record so the gate catches a
+    silent downgrade.  Returns the
     machine-readable schema-5 record merged into BENCH_scf.json;
     ``grid_shape`` is what the trajectory gate keys scenarios by,
     ``band_update``/``segments`` let it catch a silent fallback to the
@@ -294,7 +301,7 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
                     e_tol=1e-4 if quick else 1e-5,
                     r_tol=1e-3 if quick else 1e-4,
                     stack_k=stack_k, jit_step=jit_step,
-                    segment_padding=segment_padding)
+                    segment_padding=segment_padding, backend=backend)
     global_plan_cache().clear()
     res = run_scf(cfg, grid=grid)
     c = res.cache_stats
@@ -314,6 +321,7 @@ def bench_scf(rows, quick=False, grid_shape=None, tag="scf",
             "devices": jax.device_count(), "quick": bool(quick),
             "jit_step": bool(cfg.jit_step),
             "segment_padding": segment_padding,
+            "backend": res.backend,
         },
         "grid_shape": list(grid_shape),
         "grid_rank": len(grid_shape),
@@ -576,6 +584,33 @@ def require_stacked_route(record: dict, tag: str) -> dict:
     return record
 
 
+def require_backend(record: dict, tag: str, backend: str) -> dict:
+    """Hard-fail when a backend-pinned scenario silently ran another route.
+
+    ``scf-pallas`` exists to measure the fused sphere-pack kernels; its
+    record must carry the requested backend *and*, for "pallas", show
+    fused kernel dispatches in the scenario's metrics window — a record
+    whose H sweeps quietly composed unpack/plan/pack would be compared
+    against fused baselines and mask (or fake) a perf cliff.
+    """
+    got = record.get("scenario", {}).get("backend")
+    if got != backend:
+        raise SystemExit(
+            f"{tag}: resolved backend was {got!r}, expected {backend!r} — "
+            "refusing to emit a mislabeled record")
+    if backend == "pallas":
+        fused = record.get("metrics", {}).get("sphere_pack", {})
+        if not (fused.get("unpack_dft", 0) > 0
+                and fused.get("dft_pack", 0) > 0):
+            raise SystemExit(
+                f"{tag}: no fused sphere-pack dispatches in the metrics "
+                f"window ({fused}) — the H sweeps fell back to the "
+                "composed unpack/plan/pack route; fix the fusion guards "
+                "rather than benchmarking the fallback under a pallas "
+                "label")
+    return record
+
+
 def write_scenario_records(scf_records: dict, json_out: str,
                            merge: bool = False) -> dict:
     """Atomically write the schema-5 artifact; with ``merge``, fold the
@@ -718,6 +753,28 @@ def main(argv=None) -> None:
                                       tag="scf-jit", stack_k=True,
                                       jit_step=True)),
                 "scf-jit")
+    if "scf-pallas" in wanted:
+        import jax
+        # the probe must exist before the metrics window opens so the
+        # record's delta starts from this scenario, not process start
+        import repro.kernels.sphere_pack  # noqa: F401
+        shape = scf_stacked_grid_shape(jax.device_count())
+        if shape is None:
+            print(f"# scf-pallas skipped: needs the scf-stacked grid (a "
+                  f"batch×fft split whose batch factor carries the "
+                  f"nk·nbands = {SCF_NK}·{SCF_NBANDS} stacked batch); "
+                  f"{jax.device_count()} device(s) have none "
+                  "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        else:
+            scf_records["scf-pallas"] = require_backend(
+                require_stacked_route(
+                    _metrics_window(
+                        lambda: bench_scf(rows, args.quick,
+                                          grid_shape=shape,
+                                          tag="scf-pallas", stack_k=True,
+                                          backend="pallas")),
+                    "scf-pallas"),
+                "scf-pallas", "pallas")
     if "scf-3d" in wanted:
         import jax
         shape = scf_3d_grid_shape(jax.device_count())

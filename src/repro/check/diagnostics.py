@@ -42,6 +42,8 @@ CODES: dict[str, str] = {
                "contract",
     "FFTB116": "sphere diameter outside (0, n]",
     "FFTB117": "padding budget outside [0, 1)",
+    "FFTB118": "pallas backend request violates the fused sphere-pack "
+               "kernels' line-length or VMEM constraints",
     "FFTB120": "coefficient array shape does not match the sphere's "
                "packed length",
     "FFTB121": "dtype contract violation (complex coefficients / real "

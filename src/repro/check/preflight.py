@@ -222,18 +222,28 @@ def _basis_plan_bytes(spheres, segments, nbands: int, n: int, d: int
     return per_k + stacked + dft
 
 
+#: VMEM budget the fused sphere-pack kernels' per-plane working set must
+#: fit (one x-plane's first-stage slab + the resident packed operands).
+_PALLAS_VMEM_BYTES = 16 * 2 ** 20
+
+
 def preflight_basis(n: int, *, diameter: int | None = None,
                     kpts=((0.0, 0.0, 0.0),), nbands: int = 4,
                     grid=None, grid_shape=None, batch_axes=None,
                     fft_axes=None, segment_padding: float | None = None,
                     cache_max_bytes: int | None = None,
+                    backend: str | None = None,
                     deep: bool = False) -> list[Diagnostic]:
     """Feasibility of a ``PlaneWaveBasis`` configuration.
 
     Cheap arithmetic checks always run; ``deep=True`` additionally
     builds the k-point spheres host-side (still no device work) for
     segmentation, stackability (FFTB114/115) and cache-budget (FFTB130)
-    analysis — the CLI/self-audit mode.
+    analysis — the CLI/self-audit mode.  ``backend`` (the resolved
+    line-DFT backend) enables the FFTB118 pallas-constraint checks: a
+    "pallas" request whose line lengths exceed the dense-DFT crossover
+    or whose fused-kernel working set overflows the VMEM budget is an
+    error *here*, not a silent downgrade at plan-build time.
     """
     import numpy as np
 
@@ -296,6 +306,43 @@ def preflight_basis(n: int, *, diameter: int | None = None,
             f"segment_padding must be in [0, 1), got {segment_padding}",
             location="segment_padding",
             hint="it is a padded-lane *fraction* budget"))
+
+    if backend is not None:
+        from ..core.local_fft import _BACKENDS, MATMUL_MAX_N
+        if backend not in _BACKENDS:
+            diags.append(error(
+                "FFTB118",
+                f"unknown line-DFT backend {backend!r}",
+                location="backend",
+                hint=f"choose one of {_BACKENDS}"))
+        elif backend == "pallas" and d > 0:
+            if max(n, d) > MATMUL_MAX_N:
+                diags.append(error(
+                    "FFTB118",
+                    f"backend 'pallas' requested but the line lengths "
+                    f"(n={n}, d={d}) exceed the dense-DFT crossover "
+                    f"{MATMUL_MAX_N} — the fused sphere-pack kernels "
+                    "would silently realize as 'jnp'",
+                    location="backend",
+                    hint="shrink the cube/cutoff below the crossover or "
+                         "request backend='jnp' explicitly"))
+            else:
+                # fused unpack-DFT working set per grid step: one
+                # x-plane's (B_loc, ey, n) re/im slab plus the resident
+                # packed operands, DFT planes and line tables — all f32
+                b_loc = max(nk * int(nbands) // max(bp, 1), 1)
+                npk = int(math.pi / 6.0 * d ** 3) + 1
+                slab = (8 * b_loc * (d * n + npk) + 8 * n * d
+                        + 12 * b_loc * d)
+                if slab > _PALLAS_VMEM_BYTES:
+                    diags.append(error(
+                        "FFTB118",
+                        f"fused sphere-pack working set ~{slab} bytes "
+                        f"per x-plane exceeds the {_PALLAS_VMEM_BYTES}-"
+                        "byte VMEM budget",
+                        location="backend",
+                        hint="shrink nbands/nk or the cutoff diameter, "
+                             "or use backend='matmul' (unfused)"))
 
     if not deep or any(dg.is_error for dg in diags):
         return diags
@@ -482,7 +529,8 @@ def preflight_config(cfg: dict, *, name: str = "",
             batch_axes=cfg.get("batch_axes"),
             fft_axes=cfg.get("fft_axes"),
             segment_padding=cfg.get("segment_padding"),
-            cache_max_bytes=cfg.get("cache_max_bytes"), deep=True)
+            cache_max_bytes=cfg.get("cache_max_bytes"),
+            backend=cfg.get("backend"), deep=True)
     return [Diagnostic(dg.code, dg.severity, dg.message,
                        f"{loc}: {dg.location}" if dg.location else loc,
                        dg.hint) for dg in diags]

@@ -112,15 +112,30 @@ def _pallas_backend(x, axis, n_in, n_out, inverse):
     return jnp.moveaxis(yf.reshape(*shp[:-1], n_out), -1, axis)
 
 
+def realized_backend(n_in: int, n_out: int, backend: str) -> str:
+    """The backend ``local_dft`` will actually run for this line shape.
+
+    A dense-matrix backend ("matmul" — and "pallas", whose kernel is the
+    same single GEMM) requested above the ``MATMUL_MAX_N`` crossover
+    *realizes* as "jnp" (the four-step factorization lives in
+    ``kernels/ops.py`` and is not a line-stage backend).  Everything that
+    accounts or reports per-stage work — ``dft_flops``, stage spans,
+    ``describe()`` — must go through this so the books match what executed
+    rather than what was requested.
+    """
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend in ("matmul", "pallas") and max(n_in, n_out) > MATMUL_MAX_N:
+        return "jnp"
+    return backend
+
+
 def local_dft(x, axis: int, n_out: int | None = None, *,
               inverse: bool = False, backend: str = "matmul"):
     """Apply a (possibly rectangular) DFT along ``axis`` of complex ``x``."""
     n_in = x.shape[axis]
     n_out = n_in if n_out is None else n_out
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}")
-    if backend == "matmul" and max(n_in, n_out) > MATMUL_MAX_N:
-        backend = "jnp"          # four-step lives in kernels/ops.py
+    backend = realized_backend(n_in, n_out, backend)
     x = x.astype(jnp.complex64)
     if backend == "jnp":
         return _jnp_backend(x, axis, n_in, n_out, inverse)
@@ -130,7 +145,13 @@ def local_dft(x, axis: int, n_out: int | None = None, *,
 
 
 def dft_flops(n_out: int, n_in: int, batch: int, backend: str) -> int:
-    """FLOP estimate for one batched line-DFT stage (roofline/fig9 model)."""
+    """FLOP estimate for one batched line-DFT stage (roofline/fig9 model).
+
+    Priced at the *realized* backend: a matmul/pallas stage above the
+    ``MATMUL_MAX_N`` crossover silently runs "jnp", and reporting dense
+    GEMM FLOPs for it would overstate the stage ~n/log n-fold.
+    """
+    backend = realized_backend(n_in, n_out, backend)
     if backend == "matmul" or backend == "pallas":
         # 4 real GEMMs, 2·m·n MACs each → 8·m·n real FLOPs per line... use
         # 8 flops per complex MAC: y(n_out) = W(n_out×n_in) x

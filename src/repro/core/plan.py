@@ -37,7 +37,7 @@ from . import layout as L
 from ..obs.metrics import global_metrics
 from ..obs.trace import get_tracer
 from .dtensor import DistTensor
-from .local_fft import dft_flops, local_dft
+from .local_fft import dft_flops, local_dft, realized_backend
 from .policy import TUNE_CANDIDATES, ExecPolicy
 
 
@@ -69,6 +69,13 @@ class FFTStage:
     def transform_size(self) -> int:
         """The full DFT length N the (possibly sliced) matrix comes from."""
         return max(self.n_in, self.n_out)
+
+    @property
+    def realized_backend(self) -> str:
+        """The backend this stage actually runs (``local_dft`` silently
+        downgrades dense backends above the MATMUL_MAX_N crossover) —
+        what flop accounting and stage spans must report."""
+        return realized_backend(self.n_in, self.n_out, self.backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,8 +291,11 @@ class Plan:
         for st in self.stages:
             if isinstance(st, FFTStage):
                 kind = "iDFT" if st.inverse else "DFT"
+                rb = st.realized_backend
+                be = st.backend if rb == st.backend else \
+                    f"{st.backend}->{rb}"
                 lines.append(f"  {kind}[{st.dim}] {st.n_in}->{st.n_out} "
-                             f"({st.backend})")
+                             f"({be})")
             else:
                 lines.append(f"  a2a[{st.axis_name}] {st.src}->{st.dst}")
         scale = getattr(self, "scale", 1.0)
@@ -355,6 +365,8 @@ class FftPlan(Plan):
         """
         FftPlan.searches += 1
         fft_in = [i for i, _ in self.fft_pairs]
+        dim_pos = {d: k for k, d in enumerate(self.dims)}
+        innermost = max(fft_in, key=lambda d: dim_pos[d])
         best = None
         for perm in itertools.permutations(fft_in):
             try:
@@ -364,7 +376,11 @@ class FftPlan(Plan):
             cost = sum(s["bytes_per_device"]
                        for s in self._comm_stats_for(stages))
             moves = sum(isinstance(s, MoveStage) for s in stages)
-            key = (cost, moves)
+            # comm-equal tie-break: transform the innermost (contiguous)
+            # dim first — the paper's canonical z-first order, and the
+            # stage the fused sphere-pack kernels can absorb.  Matters on
+            # single-device grids where every schedule prices to zero.
+            key = (cost, moves, perm.index(innermost))
             if best is None or key < best[0]:
                 best = (key, stages)
         if best is None:
@@ -595,7 +611,7 @@ class FftPlan(Plan):
             if isinstance(st, FFTStage):
                 kind = "idft" if st.inverse else "dft"
                 meta = {"name": f"{kind}[{st.dim}] {st.n_in}->{st.n_out}",
-                        "kind": "fft", "backend": st.backend}
+                        "kind": "fft", "backend": st.realized_backend}
                 out_spec = in_spec
             else:
                 stats = next(comm)

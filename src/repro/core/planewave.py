@@ -29,15 +29,244 @@ import math
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from . import compat
+from ..obs.trace import get_tracer
 from .domain import Domain, SphereDomain
 from .dtensor import DistTensor
-from .plan import FftPlan, Plan
+from .local_fft import dft_matrix_device, realized_backend
+from .plan import FFTStage, FftPlan, Plan
 from .policy import ExecPolicy
 
 
-class PlaneWaveFFT(Plan):
+# ---------------------------------------------------------- fused kernels
+def _pspec_entry(grid, axes):
+    """One PartitionSpec entry for a dim sharded over ``axes``."""
+    if not axes:
+        return None
+    if len(axes) == 1:
+        return grid.axis_name(axes[0])
+    return tuple(grid.axis_name(a) for a in axes)
+
+
+def _fused_unpack_parts(wrapper, spheres, nbands: int, npacked: int):
+    """Build the fused unpack+first-stage dispatcher for ``wrapper``.
+
+    Fusion applies when the wrapper runs the pallas backend and its plan
+    opens with a local line-DFT stage on the trailing (z) dim — the staged
+    schedule's d→n pad-fused stage.  That stage is replaced by the
+    ``sphere_pack.unpack_dft`` kernel reading packed CSR lanes directly
+    (the zero-padded bounding cube is never materialized); the remaining
+    stages become a derived *remainder* plan (no second schedule search)
+    whose execution keeps the dispatch-count and span accounting of the
+    composed route.  Returns None when the plan shape doesn't allow it —
+    callers fall back to ``unpack`` + the full plan, which is bitwise the
+    same result.
+    """
+    from ..kernels import sphere_pack
+
+    p = wrapper.plan
+    tin, tout, grid = p.tin, p.tout, wrapper.grid
+    if len(tin.dims) != 4 or not p.stages or p.scale != 1.0:
+        return None
+    st = p.stages[0]
+    ex, ey, ez = tin.shape[1:]
+    if not (isinstance(st, FFTStage) and st.index == 3 and st.n_in == ez):
+        return None
+    if realized_backend(st.n_in, st.n_out, wrapper.backend) != "pallas":
+        return None
+    bdim, xdim, ydim, zdim = tin.dims
+    lay = tin.layout
+    if lay.get(ydim, ()) or lay.get(zdim, ()):
+        return None
+    B = tin.shape[0]
+    if B != len(spheres) * nbands:
+        return None
+
+    start, zlo, cnt, flag = sphere_pack.line_tables(spheres, nbands)
+    wr, wi, _ = dft_matrix_device(st.n_out, st.n_in, st.inverse)
+    mid = DistTensor(tin.domains[:-1]
+                     + (Domain((0, 0, 0), (ex - 1, ey - 1, st.n_out - 1)),),
+                     tin.dims, tin.layout, grid)
+    rem = FftPlan(mid, tout,
+                  [pr for pr in p.fft_pairs if pr[0] != st.dim],
+                  inverse=p.is_inverse, backend=wrapper.backend,
+                  policy=wrapper.policy, _stages=p.stages[1:],
+                  _scale=p.scale)
+
+    def body(packed, start, zlo, cnt, flag, wr, wi):
+        packed = packed.astype(jnp.complex64)
+        yr, yi = sphere_pack.unpack_dft(
+            jnp.real(packed), jnp.imag(packed), start, zlo, cnt, flag,
+            wr, wi)
+        return jax.lax.complex(yr, yi)
+
+    bentry = _pspec_entry(grid, lay.get(bdim, ()))
+    xentry = _pspec_entry(grid, lay.get(xdim, ()))
+    t_spec = P(bentry, xentry)        # line tables split with the x planes
+    in_specs = (P(bentry, None), t_spec, t_spec, t_spec,
+                P(xentry, None), P(None, None), P(None, None))
+    fn = jax.jit(compat.shard_map(body, grid.mesh, in_specs, mid.pspec))
+    tables = (jnp.asarray(start), jnp.asarray(zlo), jnp.asarray(cnt),
+              jnp.asarray(flag), wr, wi)
+    return {"fn": fn, "rem": rem, "tables": tables,
+            "in_shape": (B, npacked), "private": tables[:4]}
+
+
+def _fused_pack_parts(wrapper, spheres, nbands: int, npacked: int):
+    """Build the fused last-stage+pack dispatcher for ``wrapper``.
+
+    The mirror of :func:`_fused_unpack_parts`: when the plan *closes* with
+    a local truncating line-DFT on the trailing dim, a derived *lead* plan
+    runs every stage but the last, and ``sphere_pack.dft_pack`` fuses that
+    final n→d stage with the CSR gather to ``(B, npacked)``.  Lane
+    localization happens inside the shard_map body (each shard owns a
+    contiguous x-plane range; lanes outside it are masked and merged by a
+    psum over the fft axes), so padded lanes still come out exactly zero.
+    """
+    from ..kernels import sphere_pack
+
+    p = wrapper.plan
+    tin, tout, grid = p.tin, p.tout, wrapper.grid
+    if len(tout.dims) != 4 or not p.stages or p.scale != 1.0:
+        return None
+    st = p.stages[-1]
+    ex, ey, ez = tout.shape[1:]
+    if not (isinstance(st, FFTStage) and st.index == 3 and st.n_out == ez):
+        return None
+    if realized_backend(st.n_in, st.n_out, wrapper.backend) != "pallas":
+        return None
+    bdim, xdim, ydim, zdim = tout.dims
+    lay = tout.layout
+    if lay.get(ydim, ()) or lay.get(zdim, ()):
+        return None
+    B = tout.shape[0]
+    if B != len(spheres) * nbands:
+        return None
+
+    lg, zz, vv = sphere_pack.pack_gather_tables(spheres, nbands, npacked)
+    wr, wi, _ = dft_matrix_device(st.n_out, st.n_in, st.inverse)
+    mid = DistTensor(tout.domains[:-1]
+                     + (Domain((0, 0, 0), (ex - 1, ey - 1, st.n_in - 1)),),
+                     tout.dims, tout.layout, grid)
+    lead = FftPlan(tin, mid,
+                   [pr for pr in p.fft_pairs if pr[0] != st.dim],
+                   inverse=p.is_inverse, backend=wrapper.backend,
+                   policy=wrapper.policy, _stages=p.stages[:-1],
+                   _scale=1.0)
+    x_axes = tuple(lay.get(xdim, ()))
+    names = tuple(grid.axis_name(a) for a in x_axes)
+    sizes = tuple(grid.shape[a] for a in x_axes)
+    d_out = st.n_out
+
+    def body(slab, lg, zz, vv, wr, wi):
+        slab = slab.astype(jnp.complex64)
+        xr, xi = jnp.real(slab), jnp.imag(slab)
+        ex_loc, ey_loc = xr.shape[1], xr.shape[2]
+        ix = 0                       # flattened shard index over the x axes
+        for nm, s in zip(names, sizes):
+            ix = ix * s + jax.lax.axis_index(nm)
+        ll = lg - ix * ex_loc * ey_loc          # global line → local line
+        nloc = ex_loc * ey_loc
+        ok = ((ll >= 0) & (ll < nloc) & (vv != 0)).astype(jnp.int32)
+        g = jnp.clip(ll * d_out + zz, 0, nloc * d_out - 1).astype(jnp.int32)
+        pr, pi = sphere_pack.dft_pack(xr, xi, g, ok, wr, wi)
+        out = jax.lax.complex(pr, pi)
+        if names:
+            # each lane is gathered on exactly one shard (zeros elsewhere)
+            out = jax.lax.psum(out, names)
+        return out
+
+    bentry = _pspec_entry(grid, lay.get(bdim, ()))
+    in_specs = (mid.pspec, P(bentry, None), P(bentry, None),
+                P(bentry, None), P(None, None), P(None, None))
+    fn = jax.jit(compat.shard_map(body, grid.mesh, in_specs,
+                                  P(bentry, None)))
+    tables = (jnp.asarray(lg), jnp.asarray(zz), jnp.asarray(vv), wr, wi)
+    return {"fn": fn, "lead": lead, "tables": tables,
+            "out_shape": (B, npacked), "private": tables[:3]}
+
+
+class _FusedTransformMixin:
+    """Fused pack/unpack entry points shared by the plane-wave wrappers.
+
+    ``unpack_transform``/``transform_pack`` are the hot-path API: on the
+    pallas backend they route the trailing-dim line-DFT stage through the
+    fused sphere-pack kernels; on every other backend (or when the plan
+    shape rules fusion out) they compose the existing ``unpack``/``pack``
+    with the full plan — same result, bit for bit.
+    """
+
+    def _fused_in_parts(self):
+        memo = self.__dict__.get("_fused_in_memo", "unset")
+        if memo == "unset":
+            memo = _fused_unpack_parts(self, self._fusion_spheres,
+                                       self._fusion_nbands,
+                                       self._fusion_npacked)
+            self.__dict__["_fused_in_memo"] = memo
+        return memo
+
+    def _fused_out_parts(self):
+        memo = self.__dict__.get("_fused_out_memo", "unset")
+        if memo == "unset":
+            memo = _fused_pack_parts(self, self._fusion_spheres,
+                                     self._fusion_nbands,
+                                     self._fusion_npacked)
+            self.__dict__["_fused_out_memo"] = memo
+        return memo
+
+    def unpack_transform(self, packed, *, policy: ExecPolicy | None = None):
+        """``unpack`` + transform in one go — fused on the pallas backend.
+
+        The fused route needs the eager executor and the exact ``(B,
+        npacked)`` hot-path shape; anything else falls back to the composed
+        route (bitwise-identical output).
+        """
+        pol = self.resolve_policy(policy=policy)
+        parts = self._fused_in_parts()
+        if (parts is None or pol.mode != "eager"
+                or tuple(packed.shape) != parts["in_shape"]):
+            return self(self.unpack(packed), policy=pol)
+        from ..kernels import sphere_pack
+        sphere_pack.DISPATCHES["unpack_dft"] += 1
+        tr = get_tracer()
+        if tr.enabled and not compat.is_tracer(packed):
+            with tr.span("fused:unpack_dft", backend="pallas",
+                         npacked=parts["in_shape"][1]) as sp:
+                mid = sp.sync(parts["fn"](packed, *parts["tables"]))
+        else:
+            mid = parts["fn"](packed, *parts["tables"])
+        return parts["rem"](mid, policy=pol)
+
+    def transform_pack(self, cube, *, policy: ExecPolicy | None = None):
+        """Transform + ``pack`` in one go — fused on the pallas backend."""
+        pol = self.resolve_policy(policy=policy)
+        parts = self._fused_out_parts()
+        if parts is None or pol.mode != "eager":
+            return self.pack(self(cube, policy=pol))
+        from ..kernels import sphere_pack
+        sphere_pack.DISPATCHES["dft_pack"] += 1
+        mid = parts["lead"](cube, policy=pol)
+        tr = get_tracer()
+        if tr.enabled and not compat.is_tracer(cube):
+            with tr.span("fused:dft_pack", backend="pallas",
+                         npacked=parts["out_shape"][1]) as sp:
+                return sp.sync(parts["fn"](mid, *parts["tables"]))
+        return parts["fn"](mid, *parts["tables"])
+
+    def _fused_table_bytes(self) -> int:
+        tot = 0
+        for key in ("_fused_in_memo", "_fused_out_memo"):
+            parts = self.__dict__.get(key)
+            if isinstance(parts, dict):
+                tot += sum(int(t.nbytes) for t in parts["private"])
+        return tot
+
+
+class PlaneWaveFFT(_FusedTransformMixin, Plan):
     """Batched distributed sphere ↔ real-space transform."""
 
     def __init__(self, sphere: SphereDomain, n: tuple[int, ...],
@@ -120,6 +349,20 @@ class PlaneWaveFFT(Plan):
         """Zero out everything outside the cut-off sphere (cube form)."""
         return cube * self._mask.astype(cube.dtype)
 
+    # ------------------------------------------------------- fused kernels
+    @property
+    def _fusion_spheres(self):
+        return [self.sphere]
+
+    @property
+    def _fusion_nbands(self) -> int:
+        # the whole batch dim rides one sphere
+        return int(self.tin.shape[0])
+
+    @property
+    def _fusion_npacked(self) -> int:
+        return self.sphere.npacked
+
     # ---------------------------------------------------------- accounting
     # flop_count/comm_stats come from Plan via the delegated stage list
     def private_bytes(self) -> int:
@@ -127,7 +370,7 @@ class PlaneWaveFFT(Plan):
         spheres expensive cache entries (DFT-matrix operands are shared
         across plans and accounted via ``shared_table_bytes``)."""
         return (int(self._pack_idx.nbytes) + int(self._mask.nbytes)
-                + super().private_bytes())
+                + self._fused_table_bytes() + super().private_bytes())
 
     def describe(self) -> str:
         return ("PlaneWaveFFT sphere d=%d -> grid n=%d\n" %
@@ -377,7 +620,7 @@ def padded_kinetic_table(spheres, box_length: float
     return kin, valid
 
 
-class StackedPlaneWaveFFT(Plan):
+class StackedPlaneWaveFFT(_FusedTransformMixin, Plan):
     """One sphere↔cube transform over a ragged batch of k-point spheres.
 
     The paper's batching argument, applied across k-points: all ``nk``
@@ -421,6 +664,12 @@ class StackedPlaneWaveFFT(Plan):
         # the mask is kept host-side for introspection/tests only
         self._valid = valid
         self.npacked_max = int(idx.shape[1])
+        # pack-side gather table: the dump slot is clipped back into the
+        # cube and masked with the lane validity instead, so ``pack`` never
+        # concatenates a zero slot onto the flattened cube per dispatch
+        cells = math.prod(self.extents)
+        self._pack_gather_idx = jnp.asarray(np.minimum(idx, cells - 1))
+        self._valid_dev = jnp.asarray(valid)
 
     # ------------------------------------------------------------- queries
     @property
@@ -526,23 +775,43 @@ class StackedPlaneWaveFFT(Plan):
     def pack(self, cube):
         """``(nk·nbands, d, d, d)`` cubes → ``(nk·nbands, npacked_max)``.
 
-        Padded lanes gather from the zero slot — they come out exactly
-        zero, whatever the cube holds.
+        Padded lanes come out exactly zero, whatever the cube holds: the
+        gather table clips their dump slot back into the cube and the
+        precomputed validity mask zeroes the result (``jnp.where`` yields
+        +0.0, bit-identical to the old zero-slot gather) — no per-dispatch
+        zero-slot concatenate on the hot path.
         """
         d = self.extents
         cells = math.prod(d)
         flat = cube.reshape(self.nk, self.nbands, cells)
-        flat = jnp.concatenate([flat, jnp.zeros_like(flat[..., :1])], -1)
-        kk = jnp.arange(self.nk)[:, None, None]
-        bb = jnp.arange(self.nbands)[None, :, None]
-        out = flat[kk, bb, self._pad_idx[:, None, :]]
+        # take_along_axis keeps the gather single-indexed: no per-dispatch
+        # start-index concatenate in the lowered computation
+        idx = jnp.broadcast_to(self._pack_gather_idx[:, None, :],
+                               (self.nk, self.nbands, self.npacked_max))
+        out = jnp.take_along_axis(flat, idx, axis=2)
+        out = jnp.where(self._valid_dev[:, None, :], out, 0)
         return out.reshape(self.nk * self.nbands, self.npacked_max)
+
+    # ------------------------------------------------------- fused kernels
+    @property
+    def _fusion_spheres(self):
+        return self.spheres
+
+    @property
+    def _fusion_nbands(self) -> int:
+        return self.nbands
+
+    @property
+    def _fusion_npacked(self) -> int:
+        return self.npacked_max
 
     # ---------------------------------------------------------- accounting
     def private_bytes(self) -> int:
         """The ragged pack tables are per-sphere-set — never shared."""
         return (int(self._pad_idx.nbytes) + int(self._valid.nbytes)
-                + super().private_bytes())
+                + int(self._pack_gather_idx.nbytes)
+                + int(self._valid_dev.nbytes)
+                + self._fused_table_bytes() + super().private_bytes())
 
     def describe(self) -> str:
         return ("StackedPlaneWaveFFT %d spheres d=%d -> grid n=%d "

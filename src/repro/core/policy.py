@@ -11,6 +11,12 @@ the candidate policies and pins the fastest one on the plan.
                  "bfloat16"; accumulation stays f32 either way)
   check_shapes   validate call-time input shape against the plan's input
                  descriptor (turn off inside hot traced code)
+  backend        preferred line-DFT backend for plans built under this
+                 policy (None = let the builder default, conventionally
+                 "matmul"; "pallas" routes the sphere hot path through the
+                 fused sphere-pack kernels).  A *preference*, resolved at
+                 plan-build boundaries (e.g. PlaneWaveBasis) — an explicit
+                 ``backend=`` argument always wins.
 
 The dataclass is frozen/hashable so policies can key the process-global
 PlanCache.
@@ -21,6 +27,7 @@ import dataclasses
 
 MODES = ("eager", "lazy")
 COMPUTE_DTYPES = ("float32", "bfloat16")
+BACKENDS = ("jnp", "matmul", "pallas")
 
 # legacy mode= strings accepted at call sites, mapped to policies
 _LEGACY_MODES = {
@@ -35,6 +42,7 @@ class ExecPolicy:
     mode: str = "eager"
     compute_dtype: str = "float32"
     check_shapes: bool = True
+    backend: str | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -45,6 +53,9 @@ class ExecPolicy:
             raise ValueError(
                 f"compute_dtype {self.compute_dtype!r} not in "
                 f"{COMPUTE_DTYPES}")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend {self.backend!r} not in {BACKENDS}")
 
     @staticmethod
     def from_mode(mode: "str | ExecPolicy", *,

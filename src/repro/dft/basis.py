@@ -121,7 +121,8 @@ class PlaneWaveBasis:
                  batch_axes: tuple[int, ...] | None = None,
                  fft_axes: tuple[int, ...] | None = None,
                  segment_padding: float | None = None,
-                 policy: ExecPolicy | None = None, backend: str = "matmul"):
+                 policy: ExecPolicy | None = None,
+                 backend: str | None = None):
         self.n = int(n)
         self.d = int(diameter) if diameter is not None else self.n // 2
         self.L = float(L) if L is not None else float(n)
@@ -129,6 +130,13 @@ class PlaneWaveBasis:
             ProcGrid.create([jax.device_count()])
         self.nbands = int(nbands)
         self.policy = policy
+        # backend resolution ladder: explicit argument > policy preference
+        # > the "matmul" default.  The resolved value is what every plan
+        # request below carries — callers read ``basis.backend`` to learn
+        # what the run actually asked for (bench records persist it).
+        if backend is None:
+            backend = policy.backend if policy is not None and \
+                policy.backend is not None else "matmul"
         self.backend = backend
 
         if batch_axes is None:
@@ -147,7 +155,8 @@ class PlaneWaveBasis:
         raise_if_errors(preflight_basis(
             self.n, diameter=self.d, kpts=kpts, nbands=self.nbands,
             grid=self.grid, batch_axes=self.batch_axes,
-            fft_axes=self.fft_axes, segment_padding=segment_padding))
+            fft_axes=self.fft_axes, segment_padding=segment_padding,
+            backend=self.backend))
         self.batch_procs = math.prod(
             self.grid.axis_size(a) for a in self.batch_axes)
         self.fft_procs = math.prod(

@@ -132,14 +132,21 @@ def apply_hamiltonian_padded(basis, c_pad, v_eff, kin_pad=None,
     pack gather reads them from the zero slot and the kinetic table is
     zero there, so H·c is as inert on padding as c itself.  Traceable
     (the jitted SCF step runs it under ``jax.jit``).
+
+    The sphere↔cube legs go through the plans' fused entry points
+    (``unpack_transform`` / ``transform_pack``): with ``backend="pallas"``
+    these route the unpack + first iDFT stage and the last DFT stage +
+    pack gather through the fused sphere-pack kernels (no d³ cube ever
+    materialized); on every other backend they fall back to the composed
+    ``unpack``/plan/``pack`` calls, which are bitwise-identical — so this
+    one code path serves both the oracle and the optimized route.
     """
     if kin_pad is None:
         kin_pad = basis.stacked_band_tables(seg).kinetic
     inv, fwd = basis.stacked_hamiltonian_plans(seg)
     nk, nb, npm = c_pad.shape
-    psi = inv(inv.unpack(c_pad.reshape(nk * nb, npm)))
-    vpsi = fwd(psi * v_eff)                   # apply V, truncate back
-    vc = inv.pack(vpsi).reshape(nk, nb, npm)
+    psi = inv.unpack_transform(c_pad.reshape(nk * nb, npm))
+    vc = fwd.transform_pack(psi * v_eff).reshape(nk, nb, npm)
     return kin_pad[:, None, :] * c_pad + vc
 
 

@@ -206,7 +206,9 @@ class SCFConfig:
                                       # npacked_max segment, the pre-
                                       # segmentation behaviour)
     policy: ExecPolicy | None = None
-    backend: str = "matmul"
+    backend: str | None = None        # line-DFT backend preference; None
+                                      # resolves explicit > policy.backend
+                                      # > "matmul" (see PlaneWaveBasis)
 
 
 @dataclasses.dataclass
@@ -227,6 +229,10 @@ class SCFResult:
     padding_fraction: float = 0.0     # padded lanes / total stacked lanes
     band_update: str = "per-k"        # band-update route: "stacked" (the
                                       # batched engine) or "per-k"
+    backend: str = "matmul"           # resolved line-DFT backend the basis
+                                      # ran (what plans were built with —
+                                      # bench records persist this so a
+                                      # silent downgrade is visible)
     segments: int = 1                 # ragged-stacking segment count
     segment_padding_fractions: tuple = ()
                                       # realized per-segment padding, each
@@ -573,6 +579,7 @@ def run_scf(cfg: SCFConfig, *, grid: ProcGrid | None = None,
         grid_shape=tuple(basis.grid.shape), stacked=stacked,
         padding_fraction=padding,
         band_update="stacked" if stacked else "per-k",
+        backend=basis.backend,
         jitted=bool(cfg.jit_step),
         segments=basis.nsegments,
         segment_padding_fractions=basis.segment_padding_fractions,

@@ -1,0 +1,256 @@
+"""Fused sphere-pack Pallas kernels for the plane-wave hot path.
+
+The Hamiltonian hot chain ``pack(F(v_eff · F⁻¹(unpack(c))))`` pays two full
+``(B, d, d, d)`` bounding-cube materializations per sweep: ``unpack``
+scatters packed CSR coefficients into a freshly-zeroed cube that the first
+line-DFT stage immediately re-reads, and ``pack`` gathers npacked lanes back
+out of a cube the last stage just wrote.  The CMU flexible-DFT framework
+(1904.10119) argues the data-layout permutation should be fused *into* the
+line-transform GEMM; these two kernels realize that in Pallas:
+
+``unpack_dft``
+    reads packed CSR lanes directly and applies the first rectangular
+    (d→n, pad-fused) line-DFT stage per bounding-box line, writing the
+    first-stage slab ``(B, ex, ey, n)`` without materializing the cube.
+    The grid walks x-planes; a per-plane support flag lets planes whose
+    lines are all outside the sphere cross-section skip the gather *and*
+    the GEMM and write zeros straight from the accumulator.
+
+``dft_pack``
+    fuses the final truncating (n→d) line-DFT stage with the CSR gather
+    back to ``(B, npacked)``.  Padded lanes of a ragged stacked batch are
+    masked to exact zeros — the PR 4 validity contract (padded lanes come
+    out +0.0 whatever the slab holds) is preserved bitwise.
+
+Both kernels use the same split re/im four-GEMM formulation as
+``dft_matmul._kernel`` (one ``dot_general`` per product, f32 accumulation,
+contraction over the full line) so on CPU ``interpret=True`` they are
+*bitwise* equal to the XLA matmul route — the correctness oracle the
+stacked-vs-per-k harness gates.
+
+Index tables are static numpy built at plan time (`line_tables` /
+`pack_gather_tables`), CSR-by-xy per ``SphereDomain.pack_indices``: packed
+lanes of one (x, y) line are contiguous with z ascending, so a line is
+``(start, z_lo, cnt)`` and the in-kernel gather is ``start + (z − z_lo)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.obs.metrics import global_metrics
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+#: process-wide fused-kernel dispatch counts (python dispatch level: under
+#: jit each traced call site counts once, like ``FftPlan.executions``) —
+#: lets the bench gate assert the pallas route actually ran.
+DISPATCHES = {"unpack_dft": 0, "dft_pack": 0}
+
+global_metrics().register_probe("sphere_pack", lambda: dict(DISPATCHES))
+
+
+def _reset_dispatches():          # test helper
+    for k in DISPATCHES:
+        DISPATCHES[k] = 0
+
+
+# --------------------------------------------------------------- tables
+def line_tables(spheres, nbands: int):
+    """Static per-row line tables for the fused unpack-DFT kernel.
+
+    For every sphere k and bounding-box line l = x·ey + y:
+    ``start[k, l]`` — CSR lane of the line's first packed coefficient,
+    ``zlo[k, l]`` — its z offset inside the box, ``cnt[k, l]`` — the line's
+    packed length (0 outside the sphere's xy projection).  Tables are
+    row-expanded to the stacked batch (row b belongs to sphere b // nbands)
+    so the kernel needs no second indirection.  ``flag[x]`` is 1 iff *any*
+    sphere has support in x-plane x — the kernel's zero-skip predicate must
+    be conservative across the whole stacked batch.
+
+    Returns ``(start, zlo, cnt, flag)``: three ``(len(spheres)·nbands, ex·ey)``
+    int32 tables and an ``(ex, 1)`` int32 flag column.
+    """
+    spheres = list(spheres)
+    if not spheres:
+        raise ValueError("line_tables needs at least one sphere")
+    ex, ey, ez = spheres[0].extents
+    nlines = ex * ey
+    nk = len(spheres)
+    start = np.zeros((nk, nlines), np.int32)
+    zlo = np.zeros((nk, nlines), np.int32)
+    cnt = np.zeros((nk, nlines), np.int32)
+    flag = np.zeros((ex, 1), np.int32)
+    for k, s in enumerate(spheres):
+        if s.extents != (ex, ey, ez):
+            raise ValueError(f"sphere batch must share one bounding box; "
+                             f"got {s.extents} vs {(ex, ey, ez)}")
+        flat = s.pack_indices()
+        lines = flat // ez
+        # CSR order is line-major (columns ascend in (x, y)) with z
+        # contiguous ascending inside each line
+        uniq, first, counts = np.unique(lines, return_index=True,
+                                        return_counts=True)
+        start[k, uniq] = first
+        zlo[k, uniq] = flat[first] % ez
+        cnt[k, uniq] = counts
+        flag[uniq // ey] = 1
+    rep = functools.partial(np.repeat, repeats=nbands, axis=0)
+    return rep(start), rep(zlo), rep(cnt), flag
+
+
+def pack_gather_tables(spheres, nbands: int, npacked_max: int | None = None):
+    """Static per-row gather tables for the fused DFT-pack kernel.
+
+    Per padded lane p of sphere k: the bounding-box line ``line[k, p]`` and
+    z offset ``z[k, p]`` the lane reads from, plus ``valid[k, p]`` (0 on
+    padding — the kernel masks those lanes to exact zero).  Row-expanded to
+    the stacked batch like :func:`line_tables`.
+    """
+    spheres = list(spheres)
+    if not spheres:
+        raise ValueError("pack_gather_tables needs at least one sphere")
+    ez = spheres[0].extents[2]
+    if npacked_max is None:
+        npacked_max = max(s.npacked for s in spheres)
+    nk = len(spheres)
+    line = np.zeros((nk, npacked_max), np.int32)
+    zz = np.zeros((nk, npacked_max), np.int32)
+    valid = np.zeros((nk, npacked_max), np.int32)
+    for k, s in enumerate(spheres):
+        flat = s.pack_indices()
+        line[k, :s.npacked] = flat // ez
+        zz[k, :s.npacked] = flat % ez
+        valid[k, :s.npacked] = 1
+    rep = functools.partial(np.repeat, repeats=nbands, axis=0)
+    return rep(line), rep(zz), rep(valid)
+
+
+# -------------------------------------------------------------- kernels
+def _unpack_dft_kernel(flag_ref, start_ref, zlo_ref, cnt_ref, pr_ref, pi_ref,
+                       wr_ref, wi_ref, yr_ref, yi_ref):
+    """One x-plane: gather its ey packed lines, apply the d→n line DFT."""
+    n, d = wr_ref.shape
+
+    @pl.when(flag_ref[0, 0] == 0)
+    def _skip():
+        # no sphere support anywhere in this plane: the oracle's GEMM over
+        # all-zero lines yields exact +0.0 — write it without the FLOPs
+        yr_ref[...] = jnp.zeros(yr_ref.shape, yr_ref.dtype)
+        yi_ref[...] = jnp.zeros(yi_ref.shape, yi_ref.dtype)
+
+    @pl.when(flag_ref[0, 0] != 0)
+    def _compute():
+        start = start_ref[...]
+        zlo = zlo_ref[...]
+        cnt = cnt_ref[...]
+        B, bl = start.shape
+        npk = pr_ref.shape[1]
+        z = jax.lax.broadcasted_iota(jnp.int32, (B, bl, d), 2)
+        sel = (z >= zlo[:, :, None]) & (z < (zlo + cnt)[:, :, None])
+        idx = jnp.clip(start[:, :, None] + (z - zlo[:, :, None]),
+                       0, npk - 1).reshape(B, bl * d)
+        xr = jnp.where(sel, jnp.take_along_axis(pr_ref[...], idx,
+                                                axis=1).reshape(B, bl, d),
+                       0.0).reshape(B * bl, d)
+        xi = jnp.where(sel, jnp.take_along_axis(pi_ref[...], idx,
+                                                axis=1).reshape(B, bl, d),
+                       0.0).reshape(B * bl, d)
+        wr = wr_ref[...]
+        wi = wi_ref[...]
+        f32 = jnp.float32
+        dn = (((1,), (1,)), ((), ()))
+        rr = jax.lax.dot_general(xr, wr, dn, preferred_element_type=f32)
+        ii = jax.lax.dot_general(xi, wi, dn, preferred_element_type=f32)
+        ri = jax.lax.dot_general(xr, wi, dn, preferred_element_type=f32)
+        ir = jax.lax.dot_general(xi, wr, dn, preferred_element_type=f32)
+        yr_ref[...] = (rr - ii).reshape(B, 1, bl, n).astype(yr_ref.dtype)
+        yi_ref[...] = (ri + ir).reshape(B, 1, bl, n).astype(yi_ref.dtype)
+
+
+def _dft_pack_kernel(xr_ref, xi_ref, wr_ref, wi_ref, g_ref, v_ref,
+                     pr_ref, pi_ref):
+    """Truncating n→d line DFT over the whole local slab + CSR gather."""
+    B, ex, ey, n = xr_ref.shape
+    d = wr_ref.shape[0]
+    nlines = ex * ey
+    xr = xr_ref[...].reshape(B * nlines, n)
+    xi = xi_ref[...].reshape(B * nlines, n)
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    f32 = jnp.float32
+    dn = (((1,), (1,)), ((), ()))
+    rr = jax.lax.dot_general(xr, wr, dn, preferred_element_type=f32)
+    ii = jax.lax.dot_general(xi, wi, dn, preferred_element_type=f32)
+    ri = jax.lax.dot_general(xr, wi, dn, preferred_element_type=f32)
+    ir = jax.lax.dot_general(xi, wr, dn, preferred_element_type=f32)
+    yr = (rr - ii).reshape(B, nlines * d)
+    yi = (ri + ir).reshape(B, nlines * d)
+    g = g_ref[...]
+    v = v_ref[...] != 0
+    pr_ref[...] = jnp.where(v, jnp.take_along_axis(yr, g, axis=1),
+                            0.0).astype(pr_ref.dtype)
+    pi_ref[...] = jnp.where(v, jnp.take_along_axis(yi, g, axis=1),
+                            0.0).astype(pi_ref.dtype)
+
+
+# ------------------------------------------------------------- wrappers
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_dft(pr, pi, start, zlo, cnt, flag, wr, wi, *,
+               interpret: bool | None = None):
+    """Fused CSR-unpack + first-stage line DFT.
+
+    ``pr``/``pi``: (B, npacked) packed f32 planes; ``start``/``zlo``/``cnt``:
+    (B, ex·ey) per-row line tables; ``flag``: (ex, 1) plane-support column;
+    ``wr``/``wi``: (n, d) rectangular DFT factor.  Returns the first-stage
+    slab as (B, ex, ey, n) f32 re/im planes — the zero-padded cube is never
+    materialized.
+    """
+    interpret = _INTERPRET if interpret is None else interpret
+    B, npk = pr.shape
+    ex = flag.shape[0]
+    ey = start.shape[1] // ex
+    n, d = wr.shape
+    p_spec = pl.BlockSpec((B, npk), lambda i: (0, 0))
+    t_spec = pl.BlockSpec((B, ey), lambda i: (0, i))
+    w_spec = pl.BlockSpec((n, d), lambda i: (0, 0))
+    y_spec = pl.BlockSpec((B, 1, ey, n), lambda i: (0, i, 0, 0))
+    return pl.pallas_call(
+        _unpack_dft_kernel,
+        grid=(ex,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                  t_spec, t_spec, t_spec, p_spec, p_spec, w_spec, w_spec],
+        out_specs=[y_spec, y_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, ex, ey, n), jnp.float32)] * 2,
+        interpret=interpret,
+    )(flag, start, zlo, cnt, pr, pi, wr, wi)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dft_pack(xr, xi, g, valid, wr, wi, *, interpret: bool | None = None):
+    """Fused final truncating line DFT + CSR pack gather.
+
+    ``xr``/``xi``: (B, ex, ey, n) last-stage slab planes; ``g``: (B, npacked)
+    gather indices into the per-row (ex·ey·d,) transformed lines; ``valid``:
+    (B, npacked) int32 lane mask (0 → exact-zero output lane); ``wr``/``wi``:
+    (d, n) truncating DFT factor.  Returns (B, npacked) packed f32 planes.
+    """
+    interpret = _INTERPRET if interpret is None else interpret
+    B, ex, ey, n = xr.shape
+    npk = g.shape[1]
+    d = wr.shape[0]
+    x_spec = pl.BlockSpec((B, ex, ey, n), lambda i: (0, 0, 0, 0))
+    w_spec = pl.BlockSpec((d, n), lambda i: (0, 0))
+    g_spec = pl.BlockSpec((B, npk), lambda i: (0, 0))
+    return pl.pallas_call(
+        _dft_pack_kernel,
+        grid=(1,),
+        in_specs=[x_spec, x_spec, w_spec, w_spec, g_spec, g_spec],
+        out_specs=[g_spec, g_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, npk), jnp.float32)] * 2,
+        interpret=interpret,
+    )(xr, xi, wr, wi, g, valid)

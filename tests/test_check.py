@@ -159,6 +159,49 @@ def test_basis_bad_segment_padding_is_fftb117():
         preflight_basis(16, diameter=8, segment_padding=1.5))
 
 
+def test_basis_pallas_backend_small_problem_is_clean():
+    diags = preflight_basis(16, diameter=8, nbands=4,
+                            kpts=[(0, 0, 0), (0.5, 0.5, 0.5)],
+                            grid_shape=(1,), backend="pallas")
+    assert diags == []
+
+
+def test_basis_unknown_backend_is_fftb118():
+    diags = preflight_basis(16, diameter=8, backend="fftw")
+    assert codes(diags) == ["FFTB118"]
+    assert "unknown line-DFT backend 'fftw'" in diags[0].message
+    # matmul and jnp requests never trip the pallas constraints
+    assert preflight_basis(16, diameter=8, backend="matmul") == []
+    assert preflight_basis(16, diameter=8, backend="jnp") == []
+
+
+def test_basis_pallas_over_crossover_is_fftb118():
+    # n=4096 exceeds MATMUL_MAX_N: the plan would silently realize 'jnp'
+    diags = preflight_basis(4096, diameter=2048, grid_shape=(1,),
+                            backend="pallas")
+    assert codes(diags) == ["FFTB118"]
+    assert "dense-DFT crossover" in diags[0].message
+
+
+def test_basis_pallas_vmem_overflow_is_fftb118():
+    # huge band batch on one device: the per-plane working set cannot fit
+    diags = preflight_basis(128, diameter=64, nbands=64, grid_shape=(1,),
+                            backend="pallas")
+    assert codes(diags) == ["FFTB118"]
+    assert "VMEM budget" in diags[0].message
+    # sharding the batch over 4 devices shrinks the slab — but this one
+    # stays over budget; a small batch fits cleanly
+    assert preflight_basis(128, diameter=64, nbands=2, grid_shape=(1,),
+                           backend="pallas") == []
+
+
+def test_preflight_config_routes_backend_to_fftb118():
+    cfg = {"n": 16, "diameter": 8, "nbands": 4, "backend": "fftw"}
+    assert "FFTB118" in codes(preflight_config(cfg, grid_shape=(1,)))
+    ok = dict(cfg, backend="pallas")
+    assert preflight_config(ok, grid_shape=(1,)) == []
+
+
 # -------------------------------------------------------- service preflight
 def test_service_indivisible_cube_and_diameters():
     diags = preflight_service(15, grid_shape=(4,), diameters=(6, 20))

@@ -404,17 +404,21 @@ def test_stacked_engine_two_transforms_per_sweep_no_perk_linalg(basis2):
     linalg dispatches; the pipelined fallback pays 2·nk transforms and
     2·nk linalg calls per step."""
     from repro.dft import hamiltonian as H
+    from repro.kernels import sphere_pack
     rng = np.random.default_rng(21)
     v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
     coeffs = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
               for ik in range(basis2.nk)]
     basis2.stacked_hamiltonian_plans()          # warm the plan cache
     ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
+    d0 = dict(sphere_pack.DISPATCHES)
     _, _, nsweep = update_bands_all_k(basis2, coeffs, v, steps=2,
                                       stacked=True)
     assert nsweep == 4
     assert FftPlan.executions - ex0 == 2 * nsweep      # 2 per sweep
     assert H.PERK_LINALG_CALLS - pk0 == 0              # fully batched
+    # the matmul route must not fire the fused pallas kernels
+    assert dict(sphere_pack.DISPATCHES) == d0
     ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
     update_bands_all_k(basis2, coeffs, v, steps=2, stacked=False)
     assert FftPlan.executions - ex0 == 2 * nsweep * basis2.nk
@@ -787,6 +791,133 @@ print("OK", res.iterations, res2.iterations, res3.iterations,
       round(res.energy, 5))
 """
     out = dist(script, n_devices=8)
+    assert "OK" in out
+
+
+# ---------------------------------------- fused pallas sphere-pack route
+@pytest.fixture(scope="module")
+def basis2_pallas(g1):
+    return PlaneWaveBasis(16, kpts=KPTS2, nbands=3, grid=g1,
+                          backend="pallas")
+
+
+def test_stacked_hamiltonian_pallas_bitwise_vs_matmul(basis2, basis2_pallas):
+    """Acceptance: the fused pallas sphere-pack route through the full
+    stacked Hamiltonian apply is bitwise-equal to the composed XLA matmul
+    route on the same ragged sphere batch, matches the per-k oracle to
+    1e-10, and actually dispatches both fused kernels (no silent
+    fallback to the composed path)."""
+    from repro.kernels import sphere_pack
+    assert basis2_pallas.backend == "pallas"
+    inv, fwd = basis2_pallas.stacked_hamiltonian_plans()
+    assert inv._fused_in_parts() is not None     # fusion guards held
+    assert fwd._fused_out_parts() is not None
+    rng = np.random.default_rng(11)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    blocks = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    d0 = dict(sphere_pack.DISPATCHES)
+    hp = apply_hamiltonian_stacked(basis2_pallas, blocks, v)
+    assert sphere_pack.DISPATCHES["unpack_dft"] == d0["unpack_dft"] + 1
+    assert sphere_pack.DISPATCHES["dft_pack"] == d0["dft_pack"] + 1
+    hm = apply_hamiltonian_stacked(basis2, blocks, v)
+    for ik in range(basis2.nk):
+        assert float(jnp.abs(hp[ik] - hm[ik]).max()) == 0.0   # bitwise
+        ref = apply_hamiltonian(basis2, ik, blocks[ik], v)
+        assert float(jnp.abs(hp[ik] - ref).max()) < 1e-10
+
+
+def test_stacked_engine_pallas_dispatch_parity(basis2_pallas):
+    """The fused kernels replace a *stage*, not a plan: one pallas band
+    sweep is still exactly two plan executions (the derived remainder and
+    lead plans keep the composed route's accounting) plus exactly one
+    fused dispatch per direction per sweep, and zero per-k linalg."""
+    from repro.dft import hamiltonian as H
+    from repro.kernels import sphere_pack
+    rng = np.random.default_rng(21)
+    v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+    coeffs = [_rand_bands(rng, basis2_pallas.nbands,
+                          basis2_pallas.npacked(ik))
+              for ik in range(basis2_pallas.nk)]
+    basis2_pallas.stacked_hamiltonian_plans()   # warm the plan cache
+    ex0, pk0 = FftPlan.executions, H.PERK_LINALG_CALLS
+    d0 = dict(sphere_pack.DISPATCHES)
+    _, _, nsweep = update_bands_all_k(basis2_pallas, coeffs, v, steps=2,
+                                      stacked=True)
+    assert nsweep == 4
+    assert FftPlan.executions - ex0 == 2 * nsweep      # parity with matmul
+    assert H.PERK_LINALG_CALLS - pk0 == 0
+    assert sphere_pack.DISPATCHES["unpack_dft"] - d0["unpack_dft"] == nsweep
+    assert sphere_pack.DISPATCHES["dft_pack"] - d0["dft_pack"] == nsweep
+
+
+def test_stacked_pack_dispatch_has_no_concatenate(basis2):
+    """Satellite: the zero-slot concatenate is hoisted to table-build time
+    — the per-dispatch ``pack`` trace is gather + where only, so the
+    dispatch path never re-materializes the widened source each call."""
+    import jax
+    inv, fwd = basis2.stacked_hamiltonian_plans()
+    rng = np.random.default_rng(5)
+    blocks = [_rand_bands(rng, basis2.nbands, basis2.npacked(ik))
+              for ik in range(basis2.nk)]
+    cube = inv.unpack(jnp.asarray(inv.stack(blocks)))
+    jaxpr = str(jax.make_jaxpr(inv.pack)(cube))
+    assert "concatenate" not in jaxpr
+    # and the fast path still zeroes the padded lanes exactly
+    out = np.asarray(inv.pack(cube))
+    valid = np.repeat(inv.valid_lanes(), basis2.nbands, axis=0)
+    assert np.abs(out[~valid]).max(initial=0.0) == 0.0
+
+
+def test_stacked_hamiltonian_pallas_4dev(dist):
+    """Acceptance: fused pallas route bitwise-equal to the XLA matmul
+    route through the full stacked Hamiltonian apply on a 2×2 (batch×fft)
+    grid with 4 forced host devices — the pack-side lane localization +
+    psum merge must reproduce the composed gather exactly — and a full
+    SCF run on backend='pallas' converges to the reference energy with
+    the resolved backend surfaced on the result."""
+    script = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import ProcGrid
+from repro.dft import PlaneWaveBasis, SCFConfig, run_scf
+from repro.dft.hamiltonian import (apply_hamiltonian,
+                                   apply_hamiltonian_stacked,
+                                   orthonormalize)
+from repro.kernels import sphere_pack
+assert jax.device_count() == 4
+grid = ProcGrid.create([2, 2], ["pal_b", "pal_f"])
+kpts = ((0,0,0),(0.5,0.5,0.5))
+bp = PlaneWaveBasis(16, kpts=kpts, nbands=4, grid=grid, backend="pallas")
+bm = PlaneWaveBasis(16, kpts=kpts, nbands=4, grid=grid)
+assert bp.backend == "pallas" and bm.backend == "matmul"
+assert bp.stacks_k and bp.npacked(0) != bp.npacked(1)
+inv, fwd = bp.stacked_hamiltonian_plans()
+assert inv._fused_in_parts() is not None    # fusion engages on the 2D grid
+assert fwd._fused_out_parts() is not None
+rng = np.random.default_rng(0)
+coeffs = [orthonormalize(jnp.asarray(
+    (rng.standard_normal((4, bp.npacked(ik)))
+     + 1j*rng.standard_normal((4, bp.npacked(ik)))).astype(np.complex64)))
+    for ik in range(2)]
+v = jnp.asarray(rng.standard_normal((16, 16, 16)).astype(np.float32))
+d0 = dict(sphere_pack.DISPATCHES)
+hp = apply_hamiltonian_stacked(bp, coeffs, v)
+assert sphere_pack.DISPATCHES["unpack_dft"] == d0["unpack_dft"] + 1
+assert sphere_pack.DISPATCHES["dft_pack"] == d0["dft_pack"] + 1
+hm = apply_hamiltonian_stacked(bm, coeffs, v)
+for ik in range(2):
+    assert float(jnp.abs(hp[ik] - hm[ik]).max()) == 0.0     # bitwise
+    href = apply_hamiltonian(bm, ik, coeffs[ik], v)
+    assert float(jnp.abs(hp[ik] - href).max()) < 1e-10
+
+res = run_scf(SCFConfig(n=16, nbands=4, kpts=kpts, max_iter=50,
+                        backend="pallas"), grid=grid)
+assert res.converged, (res.energies, res.residuals)
+assert res.backend == "pallas" and res.stacked
+assert abs(res.energy - (-1.9197)) < 5e-3, res.energy
+print("OK", res.iterations, round(res.energy, 5))
+"""
+    out = dist(script, n_devices=4)
     assert "OK" in out
 
 

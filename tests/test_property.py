@@ -166,3 +166,57 @@ def test_segmenter_padding_never_exceeds_budget(seed, shifts, budget,
         # pad target every other member is padded up to
         sizes = [spheres[i].npacked for i in seg]
         assert sizes[0] == max(sizes)
+
+
+# ------------------------------------------- fused sphere-pack kernels
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 6, 8]),
+       st.sampled_from([1, 2, 3]), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_fused_unpack_transform_bitwise(seed, d, nbands, nk):
+    """unpack_transform ≡ unpack + plan, bitwise, over random sphere sets.
+
+    The fused pallas route (CPU interpret, exact kernel code) against the
+    composed XLA matmul oracle, through the full staged transform.
+    """
+    from repro.core import ProcGrid, kpoint_sphere, \
+        make_stacked_planewave_pair
+
+    rng = np.random.default_rng(seed)
+    kpts = [tuple(rng.uniform(-0.5, 0.5, 3).round(2)) for _ in range(nk)]
+    spheres = [kpoint_sphere(d, kp) for kp in kpts]
+    grid = ProcGrid.create([1])
+    inv, _ = make_stacked_planewave_pair(grid, 2 * d, spheres, nbands,
+                                         backend="pallas")
+    B, npm = nk * nbands, inv.npacked_max
+    x = jnp.asarray(_cx(seed + 1, (B, npm)))
+    fused = inv.unpack_transform(x)
+    composed = inv(inv.unpack(x))
+    assert inv._fused_in_parts() is not None     # the guard held
+    assert float(jnp.abs(fused - composed).max()) == 0.0
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 6, 8]),
+       st.sampled_from([1, 2]), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_fused_transform_pack_bitwise(seed, d, nbands, nk):
+    """transform_pack ≡ plan + pack, bitwise — and padded lanes exact zero
+    even when the input cube is seeded with garbage everywhere."""
+    from repro.core import ProcGrid, kpoint_sphere, \
+        make_stacked_planewave_pair
+
+    rng = np.random.default_rng(seed)
+    kpts = [tuple(rng.uniform(-0.5, 0.5, 3).round(2)) for _ in range(nk)]
+    spheres = [kpoint_sphere(d, kp) for kp in kpts]
+    grid = ProcGrid.create([1])
+    n = 2 * d
+    inv, fwd = make_stacked_planewave_pair(grid, n, spheres, nbands,
+                                           backend="pallas")
+    B = nk * nbands
+    cube = jnp.asarray(_cx(seed + 2, (B, n, n, n)))
+    fused = fwd.transform_pack(cube)
+    composed = fwd.pack(fwd(cube))
+    assert fwd._fused_out_parts() is not None    # the guard held
+    assert float(jnp.abs(fused - composed).max()) == 0.0
+    valid = inv.valid_lanes()
+    pad = ~np.repeat(valid, nbands, axis=0)
+    assert np.all(np.asarray(fused)[pad] == 0.0)
